@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (wall time of the REFERENCE path on CPU — the
+Pallas kernels target TPU and are validated in interpret mode; these numbers
+track the jnp fallback and the SVR end-to-end fit cost)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import svr
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # rbf_gram: the paper-technique hotspot at characterization scale
+    x = jnp.asarray(rng.normal(size=(1760, 3)), jnp.float32)
+    K, us = timed(lambda: jax.block_until_ready(ops.rbf_gram(x, x, 0.5, impl="ref")))
+    emit("rbf_gram_1760x1760", us, f"gbytes={K.size*4/1e9:.3f}")
+
+    # SVR end-to-end fit on a paper-sized grid
+    fs = np.arange(1.2, 2.3, 0.1)
+    ps = np.arange(1, 33)
+    Ns = np.array([1, 2, 3, 4, 5])
+    F, P, N = np.meshgrid(fs, ps, Ns, indexing="ij")
+    T = (60 * N + 120) / (F / 2.2) / (1.0 / (0.15 + 0.85 / P))
+    xf = np.stack([F.ravel(), P.ravel(), N.ravel()], 1)
+    y = T.ravel()
+    m, us = timed(svr.fit, xf, y)
+    emit("svr_fit_1760", us, f"train_pae={svr.pae(m, xf, y):.4f}")
+
+    # flash attention reference (the dry-run compute path)
+    q = jnp.asarray(rng.normal(size=(1, 8, 2048, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 2048, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 2048, 64)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    jax.block_until_ready(f(q, k, v))  # compile
+    out, us = timed(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * 8 * 2048 * 2048 * 64
+    emit("flash_ref_2048", us, f"gflops={flops/us/1e3:.1f}")
+
+    # ssd scan reference
+    b, s, h, p, n = 1, 2048, 8, 64, 64
+    xs = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, 1, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, 1, n)), jnp.float32)
+    g = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=128, impl="ref"))
+    jax.block_until_ready(g(xs, dt, A, B, C))
+    out, us = timed(lambda: jax.block_until_ready(g(xs, dt, A, B, C)))
+    emit("ssd_ref_2048", us, f"chunk=128")
+
+    # int8 codec
+    big = jnp.asarray(rng.normal(size=(1 << 20,)), jnp.float32)
+    fq = jax.jit(lambda x: ops.int8_quantize(x, impl="ref"))
+    jax.block_until_ready(fq(big))
+    (_, _), us = timed(lambda: jax.block_until_ready(fq(big)))
+    emit("int8_quant_1M", us, f"gbps={big.size*4/us/1e3:.2f}")

@@ -1,0 +1,156 @@
+"""Paper-reproduction benchmarks: one function per paper table/figure.
+
+  fig1_power_fit         — §3.3 / Eq. 9 / Fig. 1: stress sweep -> OLS fit
+  table1_svr_cv          — §3.4 / Table 1: full characterization + 10-fold CV
+  figs6_9_energy_surface — §4.1 / Figs. 6-9: modeled vs measured energy
+  tables2_5_vs_ondemand  — §4.2 / Tables 2-5 + Fig. 10: proposed vs Ondemand
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.core import characterize, energy, governor, power, svr
+from repro.core.node_sim import FREQ_GRID, INPUT_SIZES, PROFILES, Node
+
+APPS = ("blackscholes", "fluidanimate", "raytrace", "swaptions")
+
+
+def fig1_power_fit():
+    node = Node(seed=42)
+    (f, p, s, w), us = timed(node.stress_grid)
+    pm = power.fit_power_model(f, p, s, w)
+    rep = power.fit_report(pm, f, p, s, w)
+    derived = (
+        f"c=({rep['c1']:.3f};{rep['c2']:.3f};{rep['c3']:.2f};{rep['c4']:.2f})"
+        f"_ape={rep['ape']:.4f}_rmse={rep['rmse_watts']:.2f}W"
+        f"_paper=(0.29;0.97;198.59;9.18)_ape0.0075_rmse2.38W"
+    )
+    emit("fig1_power_fit", us, derived)
+    save_json("fig1_power_fit", rep)
+    return pm
+
+
+def table1_svr_cv(full: bool = True):
+    node = Node(seed=42)
+    rows = {}
+    for app in APPS:
+        ch = characterize.characterize(
+            characterize.NodeSampler(node, app),
+            app,
+            freqs=FREQ_GRID if full else FREQ_GRID[::2],
+            cores=range(1, 33) if full else range(1, 33, 2),
+            input_sizes=INPUT_SIZES if full else (1.0, 3.0, 5.0),
+        )
+        (res, us) = timed(ch.cross_validate, k=10)
+        mae, pae = res
+        rows[app] = {"mae": mae, "pae": pae, "n": len(ch.times)}
+        emit(f"table1_svr_cv_{app}", us, f"mae={mae:.3f}_pae={pae:.4f}")
+    save_json("table1_svr_cv", rows)
+    return rows
+
+
+def figs6_9_energy_surface(pm: power.PowerModel):
+    """Modeled vs measured energy over (f, p) at mid input (N=3)."""
+    node = Node(seed=42)
+    out = {}
+    for app in APPS:
+        ch = characterize.characterize(
+            characterize.NodeSampler(node, app),
+            app,
+            freqs=FREQ_GRID[::2],
+            cores=range(1, 33, 4),
+            input_sizes=(3.0,),
+        )
+        perf = ch.fit_svr()
+        F, P, T, W, E = energy.energy_grid(
+            pm, perf, frequencies=FREQ_GRID[::2], cores=range(1, 33, 4), input_size=3
+        )
+        E_meas = np.array(
+            [
+                [node.run_fixed(app, float(f), int(p), 3.0).energy_j for p in range(1, 33, 4)]
+                for f in FREQ_GRID[::2]
+            ]
+        )
+        err = float(np.mean(np.abs(E - E_meas) / E_meas))
+        out[app] = {"model_vs_measured_ape": err}
+        emit(f"figs6_9_energy_{app}", 0.0, f"model_vs_measured_ape={err:.4f}")
+    save_json("figs6_9_energy_surface", out)
+    return out
+
+
+def tables2_5_vs_ondemand(pm: power.PowerModel, full: bool = True):
+    node = Node(seed=42)
+    table = {}
+    core_set = (1, 2, 4, 8, 12, 16, 20, 24, 28, 30, 32)
+    for app in APPS:
+        ch = characterize.characterize(
+            characterize.NodeSampler(node, app),
+            app,
+            freqs=FREQ_GRID if full else FREQ_GRID[::2],
+            cores=range(1, 33) if full else range(1, 33, 2),
+            input_sizes=INPUT_SIZES,
+        )
+        perf = ch.fit_svr()
+        rows = []
+        for n in INPUT_SIZES:
+            cfg = energy.minimize_energy(
+                pm, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=n
+            )
+            proposed = node.run_fixed(app, cfg.frequency_ghz, cfg.cores, n)
+            od = {}
+            for c in core_set:
+                r = node.run_governor(app, governor.OndemandGovernor(), c, n)
+                od[c] = {
+                    "energy_kj": r.energy_j / 1e3,
+                    "mean_f": r.mean_freq_ghz,
+                }
+            best_c = min(od, key=lambda c: od[c]["energy_kj"])
+            worst_c = max(od, key=lambda c: od[c]["energy_kj"])
+            save_min = 100 * (od[best_c]["energy_kj"] * 1e3 - proposed.energy_j) / proposed.energy_j
+            save_max = 100 * (od[worst_c]["energy_kj"] * 1e3 - proposed.energy_j) / proposed.energy_j
+            rows.append(
+                {
+                    "input": n,
+                    "proposed": {
+                        "f": cfg.frequency_ghz,
+                        "cores": cfg.cores,
+                        "energy_kj": proposed.energy_j / 1e3,
+                    },
+                    "ondemand_min": {"cores": best_c, **od[best_c]},
+                    "ondemand_max": {"cores": worst_c, **od[worst_c]},
+                    "save_min_pct": save_min,
+                    "save_max_pct": save_max,
+                    "normalized": {
+                        c: od[c]["energy_kj"] * 1e3 / proposed.energy_j for c in od
+                    },  # Fig. 10
+                }
+            )
+            emit(
+                f"tables2_5_{app}_N{int(n)}",
+                0.0,
+                f"proposed={cfg.frequency_ghz:.1f}GHz/{cfg.cores}c/"
+                f"{proposed.energy_j/1e3:.2f}kJ_saveMin={save_min:.1f}%"
+                f"_saveMax={save_max:.1f}%",
+            )
+        table[app] = rows
+    all_rows = [r for rows in table.values() for r in rows]
+    avg_min = float(np.mean([r["save_min_pct"] for r in all_rows]))
+    avg_max = float(np.mean([r["save_max_pct"] for r in all_rows]))
+    emit(
+        "tables2_5_summary",
+        0.0,
+        f"avg_save_vs_best={avg_min:.1f}%_avg_save_vs_worst={avg_max:.0f}%"
+        f"_paper=6%_790%",
+    )
+    table["summary"] = {"avg_save_min_pct": avg_min, "avg_save_max_pct": avg_max}
+    save_json("tables2_5_vs_ondemand", table)
+    return table
+
+
+def run(full: bool = True):
+    pm = fig1_power_fit()
+    table1_svr_cv(full=full)
+    figs6_9_energy_surface(pm)
+    tables2_5_vs_ondemand(pm, full=full)

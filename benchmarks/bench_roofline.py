@@ -1,0 +1,132 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the dry-run.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip, seconds)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_bytes / link_bw
+  (all per-device quantities — the compiled HLO is the per-device program)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the usefulness
+ratio MODEL_FLOPS / (HLO_FLOPs × chips).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.core.tpu_power import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def _param_counts(arch_id):
+    """(total, active) parameter counts via eval_shape (no allocation)."""
+    import jax
+
+    arch = ARCHS[arch_id]
+    abs_params = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0), arch.full))
+    flat = jax.tree_util.tree_flatten_with_path(abs_params)[0]
+    total = 0
+    active = 0.0
+    moe = getattr(arch.full, "moe_cfg", None)
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if moe is not None and "experts" in keys:
+            active += n * (moe.top_k / moe.n_experts)
+        else:
+            active += n
+    return total, int(active)
+
+
+def model_flops(arch_id, shape_name):
+    cell = SHAPES[shape_name]
+    total, active = _param_counts(arch_id)
+    if cell.kind == "train":
+        return 6.0 * active * cell.seq * cell.batch
+    if cell.kind == "prefill":
+        return 2.0 * active * cell.seq * cell.batch
+    return 2.0 * active * cell.batch  # decode: one token per sequence
+
+
+def fix_note(dom, rec):
+    h = rec["hlo"]
+    cols = h.get("collectives", {})
+    biggest = max(cols, key=cols.get) if cols else "none"
+    return {
+        "compute": "increase arithmetic intensity (larger per-chip tiles / fewer remat recomputes)",
+        "memory": "fuse/streamline HBM traffic: bigger attention blocks, fewer reshapes, bf16 opt-state reads",
+        "collective": f"restructure sharding to shrink {biggest} volume (overlap with compute where irreducible)",
+    }[dom]
+
+
+def rows(dryrun_dir=DRYRUN_DIR):
+    out = []
+    for fname in sorted(os.listdir(dryrun_dir)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(dryrun_dir, fname)) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "ok": False,
+                        "error": rec.get("error", "?")})
+            continue
+        h = rec["hlo"]
+        chips = rec["n_devices"]
+        t_comp = h["flops_per_device"] / PEAK_FLOPS_BF16
+        t_mem = h["memory_bytes_per_device"] / HBM_BW
+        t_coll = h["collective_bytes_per_device"] / ICI_BW
+        dom = max(
+            (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+            key=lambda kv: kv[1],
+        )[0]
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_total = h["flops_per_device"] * chips
+        out.append(
+            {
+                "arch": rec["arch"],
+                "shape": rec["shape"],
+                "mesh": rec["mesh"],
+                "ok": True,
+                "chips": chips,
+                "compute_s": t_comp,
+                "memory_s": t_mem,
+                "collective_s": t_coll,
+                "dominant": dom,
+                "model_flops": mf,
+                "hlo_flops_total": hlo_total,
+                "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+                "roofline_fraction": t_comp / max(t_comp, t_mem, t_coll),
+                "fix": fix_note(dom, rec),
+                "collectives": h.get("collectives", {}),
+                "temp_bytes": rec["memory_analysis"].get("temp_size_in_bytes", 0),
+                "arg_bytes": rec["memory_analysis"].get("argument_size_in_bytes", 0),
+            }
+        )
+    return out
+
+
+def run():
+    table = rows()
+    ok_rows = [r for r in table if r.get("ok")]
+    for r in ok_rows:
+        if r["mesh"] != "pod":
+            continue
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            0.0,
+            f"comp={r['compute_s']:.3f}s_mem={r['memory_s']:.3f}s_"
+            f"coll={r['collective_s']:.3f}s_dom={r['dominant']}"
+            f"_useful={r['useful_ratio']:.2f}_frac={r['roofline_fraction']:.2f}",
+        )
+    n_bad = len(table) - len(ok_rows)
+    emit("roofline_summary", 0.0, f"cells_ok={len(ok_rows)}_failed={n_bad}")
+    save_json("roofline", table)
+    return table

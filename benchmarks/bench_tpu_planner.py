@@ -1,0 +1,52 @@
+"""Beyond-paper: energy-optimal (chips, frequency) plans for LM workloads.
+
+The paper's pipeline applied to the TPU fleet: fit the fleet power model
+from telemetry, characterize each workload's step-time surface via SVR on
+the dry-run roofline sampler, minimize E = P×T. Reports the plan and the
+saving vs the race-to-idle max-slice baseline, plus the static-vs-dynamic
+parcel analysis (paper §4.1) for v5e constants.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timed
+from repro.configs.base import SHAPES
+from repro.core.planner import EnergyOptimalPlanner
+from repro.core.tpu_power import FleetTelemetry, fit_fleet_power
+
+WORKLOADS = [
+    ("qwen1.5-110b", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "train_4k"),
+    ("gemma3-12b", "prefill_32k"),
+    ("gemma3-12b", "decode_32k"),
+    ("starcoder2-3b", "train_4k"),
+    ("zamba2-7b", "long_500k"),
+    ("mamba2-130m", "train_4k"),
+]
+
+
+def run():
+    pm = fit_fleet_power(FleetTelemetry(seed=0))
+    emit(
+        "tpu_power_fit",
+        0.0,
+        f"c=({pm.c1:.1f};{pm.c2:.1f};{pm.c3:.0f};{pm.c4:.0f})"
+        f"_race_to_idle_512chips={pm.race_to_idle_expected(1.1, 512, 2)}",
+    )
+    planner = EnergyOptimalPlanner(pm, noise=0.01, seed=0)
+    out = {}
+    for arch_id, shape in WORKLOADS:
+        plan, us = timed(planner.plan_for_workload, arch_id, SHAPES[shape])
+        save = 100 * (plan.baseline_energy_j - plan.energy_per_step_j) / max(
+            plan.baseline_energy_j, 1e-12
+        )
+        emit(
+            f"tpu_plan_{arch_id}_{shape}",
+            us,
+            f"{plan.chips}chips@{plan.frequency_ghz:.2f}GHz_"
+            f"{plan.step_time_s*1e3:.1f}ms_{plan.power_w/1e3:.1f}kW_"
+            f"save={save:.1f}%_src={plan.terms_source}",
+        )
+        out[f"{arch_id}/{shape}"] = plan.__dict__
+    save_json("tpu_planner", out)
+    return out

@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: timing + CSV emission + result registry."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)

@@ -1,0 +1,57 @@
+"""Benchmark entry point: ``python -m benchmarks.run [--quick]``.
+
+One section per paper table/figure (bench_paper_repro), plus the roofline
+table from the dry-run artifacts, the TPU planner (beyond-paper), and kernel
+micro-benches. Prints ``name,us_per_call,derived`` CSV lines.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--quick", action="store_true", help="reduced characterization grids"
+    )
+    ap.add_argument(
+        "--only",
+        choices=["paper", "roofline", "planner", "kernels"],
+        default=None,
+    )
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    if args.only in (None, "kernels"):
+        from benchmarks import bench_kernels
+
+        bench_kernels.run()
+    if args.only in (None, "paper"):
+        from benchmarks import bench_paper_repro
+
+        bench_paper_repro.run(full=not args.quick)
+    if args.only in (None, "roofline"):
+        from benchmarks import bench_roofline
+
+        bench_roofline.run()
+        # right-sizing study needs its own process (512 virtual devices)
+        import subprocess
+        import sys as _sys
+
+        proc = subprocess.run(
+            [_sys.executable, "-m", "benchmarks.bench_rightsize"],
+            capture_output=True,
+            text=True,
+            timeout=1200,
+        )
+        print(proc.stdout, end="")
+    if args.only in (None, "planner"):
+        from benchmarks import bench_tpu_planner
+
+        bench_tpu_planner.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Full paper reproduction study: all 4 PARSEC apps x 5 inputs vs Ondemand.
+
+    PYTHONPATH=src python examples/parsec_energy_study.py [--quick]
+
+Prints the Tables 2-5 analogue rows and the Fig. 10 normalized energies.
+(Also runs the actual JAX implementations of each app once, so the numbers
+sit next to living code, not just the node model.)
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.apps import APPS
+from repro.core import characterize, energy, governor, power
+from repro.core.node_sim import FREQ_GRID, INPUT_SIZES, Node
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    node = Node(seed=42)
+    f, p, s, w = node.stress_grid()
+    pm = power.fit_power_model(f, p, s, w)
+
+    for app in sorted(APPS):
+        mod = APPS[app]
+        out = mod.run(mod.make_inputs(mod.DEFAULT_N // 4 or 8, seed=0))
+        print(f"\n=== {app} (JAX kernel ran: {list(out)[0]} finite) ===")
+        ch = characterize.characterize(
+            characterize.NodeSampler(node, app),
+            app,
+            freqs=FREQ_GRID[:: 2 if args.quick else 1],
+            cores=range(1, 33, 2 if args.quick else 1),
+            input_sizes=INPUT_SIZES,
+        )
+        perf = ch.fit_svr()
+        print(f"{'N':>3} {'proposed':>16} {'E kJ':>8} {'od best':>14} {'od worst':>14} {'save%':>12}")
+        for n in INPUT_SIZES:
+            cfg = energy.minimize_energy(
+                pm, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=n
+            )
+            run = node.run_fixed(app, cfg.frequency_ghz, cfg.cores, n)
+            od = {}
+            for c in (1, 2, 4, 8, 16, 24, 32):
+                od[c] = node.run_governor(
+                    app, governor.OndemandGovernor(), c, n
+                ).energy_j
+            b = min(od, key=od.get)
+            wst = max(od, key=od.get)
+            print(
+                f"{int(n):>3} {cfg.frequency_ghz:>6.1f}GHz x{cfg.cores:>3}c "
+                f"{run.energy_j/1e3:>8.2f} "
+                f"{od[b]/1e3:>8.2f}@{b:>2}c "
+                f"{od[wst]/1e3:>8.2f}@{wst:>2}c "
+                f"{100*(od[b]-run.energy_j)/run.energy_j:>+5.1f}/"
+                f"{100*(od[wst]-run.energy_j)/run.energy_j:>+7.1f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Quickstart: the paper's full pipeline on one application, in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. stress the (simulated) 2x16-core node, fit the CMOS power model (Eq. 7),
+2. characterize blackscholes over (frequency x cores x input), fit the SVR,
+3. minimize E = P x T (Eq. 8) -> energy-optimal configuration,
+4. verify by "running" it, vs the Linux Ondemand governor.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import characterize, energy, governor, power
+from repro.core.node_sim import FREQ_GRID, Node
+
+APP, INPUT_SIZE = "blackscholes", 3.0
+
+
+def main():
+    node = Node(seed=0)
+
+    print("== 1. fit the power model (paper Eq. 7 / Eq. 9) ==")
+    f, p, s, w = node.stress_grid()
+    pm = power.fit_power_model(f, p, s, w)
+    rep = power.fit_report(pm, f, p, s, w)
+    print(
+        f"P(f,p,s) = p({rep['c1']:.2f} f^3 + {rep['c2']:.2f} f) "
+        f"+ {rep['c3']:.1f} + {rep['c4']:.1f} s"
+        f"   (APE {rep['ape']:.2%}, RMSE {rep['rmse_watts']:.2f} W)"
+    )
+    print(f"paper Eq. 9:  p(0.29 f^3 + 0.97 f) + 198.59 + 9.18 s\n")
+
+    print(f"== 2. characterize {APP} (reduced grid) + fit SVR ==")
+    ch = characterize.characterize(
+        characterize.NodeSampler(node, APP),
+        APP,
+        freqs=FREQ_GRID[::2],
+        cores=range(1, 33, 2),
+        input_sizes=(1.0, 3.0, 5.0),
+    )
+    perf = ch.fit_svr()
+    mae, pae = ch.cross_validate(k=5)
+    print(f"{len(ch.times)} samples; 5-fold CV: MAE {mae:.2f}s, PAE {pae:.2%}\n")
+
+    print("== 3. energy-optimal configuration (paper Eq. 8) ==")
+    cfg = energy.minimize_energy(
+        pm, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=INPUT_SIZE
+    )
+    print(
+        f"optimal: {cfg.frequency_ghz:.1f} GHz x {cfg.cores} cores "
+        f"-> predicted {cfg.predicted_energy_j/1e3:.2f} kJ "
+        f"({cfg.predicted_time_s:.0f}s @ {cfg.predicted_power_w:.0f}W)\n"
+    )
+
+    print("== 4. verify vs the Ondemand governor ==")
+    actual = node.run_fixed(APP, cfg.frequency_ghz, cfg.cores, INPUT_SIZE)
+    print(f"proposed (measured): {actual.energy_j/1e3:.2f} kJ")
+    results = {}
+    for cores in (1, 4, 16, 32):
+        r = node.run_governor(APP, governor.OndemandGovernor(), cores, INPUT_SIZE)
+        results[cores] = r.energy_j
+        print(
+            f"ondemand @ {cores:2d} cores: {r.energy_j/1e3:7.2f} kJ "
+            f"(mean f {r.mean_freq_ghz:.2f} GHz)"
+        )
+    best, worst = min(results.values()), max(results.values())
+    print(
+        f"\nsavings: {100*(best-actual.energy_j)/actual.energy_j:+.1f}% vs "
+        f"governor best case, {100*(worst-actual.energy_j)/actual.energy_j:+.1f}% "
+        f"vs worst case   (paper: avg +6% / +790%)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + greedy decode with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --smoke
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:] or [
+        "--arch",
+        "example-10m",
+        "--batch",
+        "4",
+        "--prompt-len",
+        "32",
+        "--gen",
+        "16",
+    ]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

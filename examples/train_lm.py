@@ -1,0 +1,38 @@
+"""End-to-end LM training example (the assignment's train driver).
+
+    PYTHONPATH=src python examples/train_lm.py                 # 10M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --model 100m --steps 3
+
+Demonstrates: synthetic pipeline, AdamW+schedule, async checkpoints,
+preemption-safe restart (kill -TERM it and re-run: it resumes), and the
+--auto-energy planner hook. The 100M model is the assignment target; on this
+1-core CPU container a few steps prove the path (see EXPERIMENTS.md §Repro-E
+for wall-time notes); the 10M variant actually converges in minutes.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:]
+    model = "10m"
+    if "--model" in argv:
+        i = argv.index("--model")
+        model = argv[i + 1]
+        argv = argv[:i] + argv[i + 2 :]
+    defaults = {
+        "10m": ["--arch", "example-10m", "--steps", "200", "--batch", "4",
+                 "--seq", "128", "--ckpt-dir", "/tmp/repro_train_10m"],
+        "100m": ["--arch", "example-100m", "--steps", "3", "--batch", "2",
+                  "--seq", "256", "--ckpt-dir", "/tmp/repro_train_100m",
+                  "--ckpt-every", "2", "--log-every", "1"],
+    }[model]
+    train.main(defaults + argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Energy-Optimal Configurations for HPC Workloads — JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""PARSEC case-study applications re-implemented in JAX (paper §3.1).
+
+Each module exposes
+    make_inputs(n: int, seed: int) -> pytree of input arrays
+    run(inputs) -> pytree of outputs          (jit-able)
+    flops(n: int) -> float                     (napkin work estimate)
+    DEFAULT_N: int                             (smoke-test size)
+
+`n` plays the role of the paper's input-size knob. These run for real on
+CPU (functional correctness + the quickstart example); their (f, p) scaling
+surfaces come from `core.node_sim` profiles, since this container cannot
+vary core counts or clocks.
+"""
+
+from repro.apps import blackscholes, fluidanimate, raytrace, swaptions
+
+APPS = {
+    "blackscholes": blackscholes,
+    "fluidanimate": fluidanimate,
+    "raytrace": raytrace,
+    "swaptions": swaptions,
+}

@@ -1,0 +1,58 @@
+"""Blackscholes: analytic European option pricing (PARSEC kernel in JAX).
+
+Prices a portfolio of n options with the closed-form Black-Scholes formula
+(the PARSEC benchmark evaluates the same formula via a polynomial CNDF
+approximation; we use the same Abramowitz-Stegun 5-coefficient polynomial so
+the arithmetic mix matches the original kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_N = 4096
+
+_A = (0.31938153, -0.356563782, 1.781477937, -1.821255978, 1.330274429)
+_INV_SQRT_2PI = 0.3989422804014327
+
+
+def _cndf(x: jnp.ndarray) -> jnp.ndarray:
+    """Cumulative normal via the PARSEC polynomial approximation."""
+    sign = x < 0
+    ax = jnp.abs(x)
+    k = 1.0 / (1.0 + 0.2316419 * ax)
+    poly = k * (_A[0] + k * (_A[1] + k * (_A[2] + k * (_A[3] + k * _A[4]))))
+    pdf = _INV_SQRT_2PI * jnp.exp(-0.5 * ax * ax)
+    cnd = 1.0 - pdf * poly
+    return jnp.where(sign, 1.0 - cnd, cnd)
+
+
+def make_inputs(n: int = DEFAULT_N, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "spot": jnp.asarray(rng.uniform(20.0, 120.0, n), jnp.float32),
+        "strike": jnp.asarray(rng.uniform(20.0, 120.0, n), jnp.float32),
+        "rate": jnp.asarray(rng.uniform(0.01, 0.06, n), jnp.float32),
+        "vol": jnp.asarray(rng.uniform(0.1, 0.6, n), jnp.float32),
+        "tte": jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32),
+        "is_call": jnp.asarray(rng.integers(0, 2, n), jnp.bool_),
+    }
+
+
+@jax.jit
+def run(inputs):
+    s, k = inputs["spot"], inputs["strike"]
+    r, v, t = inputs["rate"], inputs["vol"], inputs["tte"]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    disc = k * jnp.exp(-r * t)
+    call = s * _cndf(d1) - disc * _cndf(d2)
+    put = disc * _cndf(-d2) - s * _cndf(-d1)
+    return {"price": jnp.where(inputs["is_call"], call, put)}
+
+
+def flops(n: int) -> float:
+    return 120.0 * n  # ~dozens of transcendental-expanded flops per option

@@ -1,0 +1,103 @@
+"""Raytrace: real-time-style ray caster (PARSEC kernel in JAX).
+
+Renders a procedural sphere scene: primary rays from a pinhole camera,
+nearest-hit sphere intersection, Lambertian + Blinn-Phong shading with a
+single point light, hard shadows via one shadow ray, and one mirror bounce —
+the same speed-over-realism recipe as the PARSEC original. Fully vectorized
+over pixels; resolution is the input-size knob.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_N = 64  # image is (n, n)
+N_SPHERES = 16
+
+
+def make_inputs(n: int = DEFAULT_N, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-3, 3, (N_SPHERES, 3)).astype(np.float32)
+    centers[:, 2] = rng.uniform(4.0, 9.0, N_SPHERES)
+    return {
+        "centers": jnp.asarray(centers),
+        "radii": jnp.asarray(rng.uniform(0.4, 1.0, N_SPHERES), jnp.float32),
+        "colors": jnp.asarray(rng.uniform(0.2, 1.0, (N_SPHERES, 3)), jnp.float32),
+        "res": n,
+    }
+
+
+def _intersect(origin, direction, centers, radii):
+    """Nearest positive-t ray/sphere hit. Returns (t, sphere_idx)."""
+    oc = origin[..., None, :] - centers  # (..., S, 3)
+    b = jnp.sum(oc * direction[..., None, :], axis=-1)
+    c = jnp.sum(oc * oc, axis=-1) - radii**2
+    disc = b * b - c
+    hit = disc > 0
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    t0 = -b - sq
+    t1 = -b + sq
+    t = jnp.where(t0 > 1e-3, t0, t1)
+    t = jnp.where(hit & (t > 1e-3), t, jnp.inf)
+    idx = jnp.argmin(t, axis=-1)
+    return jnp.min(t, axis=-1), idx
+
+
+def _shade(point, normal, view, color, light_pos, in_shadow):
+    l = light_pos - point
+    l = l / jnp.linalg.norm(l, axis=-1, keepdims=True)
+    diff = jnp.maximum(jnp.sum(normal * l, axis=-1, keepdims=True), 0.0)
+    h = l + view
+    h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-9)
+    spec = jnp.maximum(jnp.sum(normal * h, axis=-1, keepdims=True), 0.0) ** 32
+    lit = jnp.where(in_shadow[..., None], 0.15, 1.0)
+    return color * (0.1 + 0.8 * diff * lit) + 0.4 * spec * lit
+
+
+@functools.partial(jax.jit, static_argnames=("res",))
+def _render(centers, radii, colors, res):
+    light_pos = jnp.asarray([5.0, 6.0, 0.0])
+    xs = jnp.linspace(-1.0, 1.0, res)
+    px, py = jnp.meshgrid(xs, -xs, indexing="xy")
+    direction = jnp.stack([px, py, jnp.ones_like(px)], axis=-1)
+    direction = direction / jnp.linalg.norm(direction, axis=-1, keepdims=True)
+    origin = jnp.zeros_like(direction)
+
+    def trace(origin, direction):
+        t, idx = _intersect(origin, direction, centers, radii)
+        hit = jnp.isfinite(t)
+        t_safe = jnp.where(hit, t, 0.0)
+        point = origin + t_safe[..., None] * direction
+        normal = (point - centers[idx]) / radii[idx][..., None]
+        color = colors[idx]
+        # shadow ray
+        to_light = light_pos - point
+        dist_l = jnp.linalg.norm(to_light, axis=-1)
+        sdir = to_light / dist_l[..., None]
+        ts, _ = _intersect(point + 1e-3 * normal, sdir, centers, radii)
+        in_shadow = ts < dist_l
+        shaded = _shade(point, normal, -direction, color, light_pos, in_shadow)
+        return jnp.where(hit[..., None], shaded, 0.05), hit, point, normal
+
+    col0, hit0, point0, normal0 = trace(origin, direction)
+    # one mirror bounce
+    refl = direction - 2.0 * jnp.sum(direction * normal0, -1, keepdims=True) * normal0
+    col1, hit1, _, _ = trace(point0 + 1e-3 * normal0, refl)
+    img = jnp.where(hit0[..., None], 0.8 * col0 + 0.2 * col1, col0)
+    return jnp.clip(img, 0.0, 1.0)
+
+
+def run(inputs):
+    return {
+        "image": _render(
+            inputs["centers"], inputs["radii"], inputs["colors"], inputs["res"]
+        )
+    }
+
+
+def flops(n: int) -> float:
+    return 3.0 * n * n * N_SPHERES * 30  # 3 traces x per-sphere quadratic solve

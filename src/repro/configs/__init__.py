@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned archs + the paper's PARSEC suite.
+
+``get_arch(id)`` returns the ArchDef; ``ARCHS`` maps every assigned id.
+"""
+
+from repro.configs import (
+    gemma3_12b,
+    granite_20b,
+    granite_moe_1b_a400m,
+    mamba2_130m,
+    phi3_vision_42b,
+    phi35_moe_42b_a66b,
+    qwen15_110b,
+    starcoder2_3b,
+    whisper_medium,
+    zamba2_7b,
+)
+from repro.configs.base import SHAPES, ArchDef, ShapeCell
+
+ARCHS = {
+    m.ARCH.arch_id: m.ARCH
+    for m in (
+        granite_moe_1b_a400m,
+        phi35_moe_42b_a66b,
+        granite_20b,
+        qwen15_110b,
+        starcoder2_3b,
+        gemma3_12b,
+        phi3_vision_42b,
+        zamba2_7b,
+        whisper_medium,
+        mamba2_130m,
+    )
+}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def cells():
+    """All (arch, shape) cells of the assignment, with applicability."""
+    out = []
+    for arch_id, arch in ARCHS.items():
+        for shape_name in SHAPES:
+            out.append((arch_id, shape_name, arch.supports(shape_name)))
+    return out

@@ -1,0 +1,169 @@
+"""Architecture registry plumbing: shape cells, model API adapters, specs.
+
+Every assigned architecture module exports an ``ArchDef`` with a FULL config
+(exact public spec) and a SMOKE config (same family, tiny dims) plus the
+entry points the launcher/dry-run need. ``input_specs`` returns
+ShapeDtypeStructs only — no allocation — for the dry-run; ``smoke_batch``
+returns real (tiny) arrays for CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, lm
+
+# ---------------------------------------------------------------------------
+# shape cells (assignment: 4 shapes x 10 archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass
+class ArchDef:
+    """Uniform adapter over LM / enc-dec model families."""
+
+    arch_id: str
+    family: str  # moe | dense | vlm | hybrid | audio | ssm
+    full: Any  # LMConfig | EncDecConfig
+    smoke: Any
+    long_500k_ok: bool
+    notes: str = ""
+
+    # ---- model entry points -------------------------------------------
+
+    def is_encdec(self) -> bool:
+        return isinstance(self.full, encdec.EncDecConfig)
+
+    def init(self, key, cfg=None):
+        cfg = cfg or self.full
+        return (encdec if self.is_encdec() else lm).init(key, cfg)
+
+    def loss_fn(self, cfg, params, batch):
+        return (encdec if self.is_encdec() else lm).loss_fn(cfg, params, batch)
+
+    def forward(self, cfg, params, batch):
+        if self.is_encdec():
+            return encdec.forward(cfg, params, batch["frames"], batch["tokens"])
+        logits, _ = lm.forward(cfg, params, batch["tokens"], batch.get("images"))
+        return logits
+
+    def prefill(self, cfg, params, batch, *, max_cache_len: int):
+        if self.is_encdec():
+            return encdec.prefill(
+                cfg, params, batch["frames"], batch["tokens"], max_cache_len=max_cache_len
+            )
+        return lm.prefill(
+            cfg,
+            params,
+            batch["tokens"],
+            max_cache_len=max_cache_len,
+            images=batch.get("images"),
+        )
+
+    def init_caches(self, cfg, batch: int, max_len: int, enc_len: int = 0):
+        if self.is_encdec():
+            return encdec.init_caches(cfg, batch, max_len, enc_len or max_len)
+        return lm.init_caches(cfg, batch, max_len)
+
+    def decode_step(self, cfg, params, caches, token):
+        return (encdec if self.is_encdec() else lm).decode_step(
+            cfg, params, caches, token
+        )
+
+    # ---- input specs (ShapeDtypeStruct, no allocation) ------------------
+
+    def supports(self, shape_name: str) -> bool:
+        if shape_name == "long_500k" and not self.long_500k_ok:
+            return False
+        return True
+
+    def input_specs(self, shape_name: str, cfg=None) -> Dict[str, Any]:
+        """Model inputs for one shape cell, as ShapeDtypeStructs.
+
+        train  -> {tokens, labels[, images|frames]}
+        prefill-> {tokens[, images|frames]}
+        decode -> {token}   (caches are built separately via init_caches)
+        """
+        cfg = cfg or self.full
+        cell = SHAPES[shape_name]
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if self.is_encdec():
+            # seq applies to the encoder frame axis; decoder tokens are
+            # bounded by the model's max target length.
+            tok_len = min(cell.seq, cfg.max_target_len)
+            if cell.kind == "train":
+                return {
+                    "frames": sds((cell.batch, cell.seq, cfg.d_model), jnp.bfloat16),
+                    "tokens": sds((cell.batch, tok_len), i32),
+                    "labels": sds((cell.batch, tok_len), i32),
+                }
+            if cell.kind == "prefill":
+                return {
+                    "frames": sds((cell.batch, cell.seq, cfg.d_model), jnp.bfloat16),
+                    "tokens": sds((cell.batch, tok_len), i32),
+                }
+            return {"token": sds((cell.batch, 1), i32)}
+        out: Dict[str, Any] = {}
+        if cell.kind in ("train", "prefill"):
+            out["tokens"] = sds((cell.batch, cell.seq), i32)
+            if cell.kind == "train":
+                out["labels"] = sds((cell.batch, cell.seq), i32)
+            if cfg.vision is not None:
+                out["images"] = sds(
+                    (cell.batch, cfg.vision.n_patches, cfg.vision.d_vision),
+                    jnp.bfloat16,
+                )
+        else:
+            out["token"] = sds((cell.batch, 1), i32)
+        return out
+
+    # ---- smoke batches (real tiny arrays) -------------------------------
+
+    def smoke_batch(self, seed: int = 0, batch: int = 2, seq: int = 32):
+        cfg = self.smoke
+        rng = np.random.default_rng(seed)
+        if self.is_encdec():
+            tok_len = min(seq, cfg.max_target_len)
+            return {
+                "frames": jnp.asarray(
+                    rng.normal(0, 1, (batch, seq, cfg.d_model)), cfg.dtype
+                ),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (batch, tok_len)), jnp.int32
+                ),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (batch, tok_len)), jnp.int32
+                ),
+            }
+        out = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+        }
+        if cfg.vision is not None:
+            out["images"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.vision.n_patches, cfg.vision.d_vision)),
+                cfg.dtype,
+            )
+        return out

@@ -1,0 +1,41 @@
+"""Example LM configs for the end-to-end training/serving drivers.
+
+``100m`` is the assignment's "~100M-param" driver model; ``10m`` is the
+CPU-budget variant the convergence example and tests actually iterate for a
+few hundred steps (a single CPU core does ~1e10 useful FLOP/s — 300 steps of
+the 100M model is a multi-day job there; same code path, smaller dims).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.models.attention import AttnConfig
+from repro.models.lm import LMConfig
+
+
+def _lm(name, layers, d, heads, kv, ff, vocab):
+    return LMConfig(
+        name=name,
+        vocab=vocab,
+        d_model=d,
+        n_layers=layers,
+        pattern=("attn",),
+        attn=AttnConfig(d_model=d, n_heads=heads, n_kv_heads=kv, d_head=d // heads),
+        d_ff=ff,
+        mlp_gated=True,
+        norm="rmsnorm",
+        act="silu",
+        tie_embeddings=True,
+        dtype=jnp.float32,
+    )
+
+
+LM_100M = _lm("example-100m", layers=12, d=768, heads=12, kv=4, ff=2048, vocab=32768)
+LM_10M = _lm("example-10m", layers=6, d=256, heads=8, kv=4, ff=1024, vocab=8192)
+
+EXAMPLES = {"100m": LM_100M, "10m": LM_10M}
+
+ARCH_100M = ArchDef(
+    arch_id="example-100m", family="dense", full=LM_100M, smoke=LM_10M,
+    long_500k_ok=False,
+)

@@ -1,0 +1,56 @@
+"""whisper-medium [audio]: enc-dec, 24+24L d=1024 16H (kv=16) d_ff=4096
+vocab=51865 — conv/mel frontend STUBBED per the assignment (input_specs
+provides precomputed frame embeddings). [arXiv:2212.04356]
+
+Shape-cell mapping for the enc-dec family: `seq` applies to the ENCODER
+frame axis; decoder token length is capped by max_target_len (448).
+decode cells step the decoder against a self-KV cache of the cell's seq
+(structurally exercised beyond whisper's trained 448 positions — positions
+wrap mod max_target_len; noted as a synthetic stressor in DESIGN.md).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.models.encdec import EncDecConfig
+
+FULL = EncDecConfig(
+    name="whisper-medium",
+    vocab=51865,
+    d_model=1024,
+    n_enc_layers=24,
+    n_dec_layers=24,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    max_target_len=448,
+    norm="layernorm",
+    act="gelu",
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = EncDecConfig(
+    name="whisper-smoke",
+    vocab=256,
+    d_model=64,
+    n_enc_layers=2,
+    n_dec_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    max_target_len=64,
+    norm="layernorm",
+    act="gelu",
+    dtype=jnp.float32,
+)
+
+ARCH = ArchDef(
+    arch_id="whisper-medium",
+    family="audio",
+    full=FULL,
+    smoke=SMOKE,
+    long_500k_ok=False,
+    notes="enc-dec full attention -> long_500k skipped; conv frontend stubbed",
+)

@@ -1,0 +1,85 @@
+"""Application characterization harness (paper §3.4).
+
+Samples execution time over the (frequency × active-cores × input-size)
+grid and assembles the SVR training set. The sampler is a protocol: the
+node simulator here, a shell-command runner on real hardware, or the
+roofline-derived step-time sampler of the TPU planner — the methodology
+downstream is identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Protocol, Sequence
+
+import numpy as np
+
+from repro.core import svr as svr_mod
+from repro.core.node_sim import FREQ_GRID, INPUT_SIZES, MAX_CORES, Node
+
+
+class Sampler(Protocol):
+    def sample(self, f: float, p: int, n: float) -> float:
+        """Return one measured execution time (seconds) at (f, p, N)."""
+        ...
+
+
+@dataclasses.dataclass
+class NodeSampler:
+    """Paper setup: run the app pinned at (f, p) on the (simulated) node."""
+
+    node: Node
+    app: str
+
+    def sample(self, f: float, p: int, n: float) -> float:
+        return self.node.run_fixed(self.app, f, p, n).time_s
+
+
+@dataclasses.dataclass
+class Characterization:
+    """The (features, times) training set for one application."""
+
+    app: str
+    features: np.ndarray  # (n, 3): f, p, N
+    times: np.ndarray  # (n,)
+
+    def fit_svr(self, **kw) -> svr_mod.SVRParams:
+        return svr_mod.fit(self.features, self.times, **kw)
+
+    def cross_validate(self, k: int = 10, **kw):
+        """10-fold CV — paper Table 1 metrics (MAE, PAE)."""
+        return svr_mod.kfold_cv(self.features, self.times, k=k, **kw)
+
+
+def characterize(
+    sampler: Sampler,
+    app: str,
+    *,
+    freqs: Sequence[float] = tuple(FREQ_GRID),
+    cores: Iterable[int] = tuple(range(1, MAX_CORES + 1)),
+    input_sizes: Sequence[float] = INPUT_SIZES,
+    repeats: int = 1,
+) -> Characterization:
+    """Run the full §3.4 sweep: all frequencies × all core counts × all
+    input sizes (×repeats). This is the step that took the paper 1-2 days of
+    machine time per application."""
+    feats, times = [], []
+    for n in input_sizes:
+        for p in cores:
+            for f in freqs:
+                for _ in range(repeats):
+                    feats.append((float(f), float(p), float(n)))
+                    times.append(sampler.sample(float(f), int(p), float(n)))
+    return Characterization(
+        app=app,
+        features=np.asarray(feats, np.float32),
+        times=np.asarray(times, np.float32),
+    )
+
+
+def subsample(ch: Characterization, fraction: float, seed: int = 0) -> Characterization:
+    """Uniformly subsample a characterization (for cheaper CI/test fits)."""
+    rng = np.random.default_rng(seed)
+    n = ch.features.shape[0]
+    idx = rng.choice(n, size=max(8, int(n * fraction)), replace=False)
+    return Characterization(app=ch.app, features=ch.features[idx], times=ch.times[idx])

@@ -1,0 +1,110 @@
+"""Energy model and optimizer (paper §2.3, Eq. 8).
+
+    E(f, p, s, N) = P(f, p, s) × SVR(f, p, N)
+
+The minimizer evaluates every configuration on the discrete (f, p) grid —
+the same exhaustive search the paper uses — optionally under execution-time,
+frequency and core-count constraints (mentioned but not exercised in the
+paper; exercised here). Batched over the grid in one jitted evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import svr as svr_mod
+from repro.core.power import PowerModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Configuration:
+    """One operating point, plus the model's estimates for it."""
+
+    frequency_ghz: float
+    cores: int
+    sockets: int
+    predicted_time_s: float
+    predicted_power_w: float
+    predicted_energy_j: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    max_time_s: Optional[float] = None
+    max_cores: Optional[int] = None
+    min_frequency_ghz: Optional[float] = None
+    max_frequency_ghz: Optional[float] = None
+
+
+def sockets_for_cores(cores: np.ndarray, cores_per_socket: int) -> np.ndarray:
+    """Active sockets implied by a core count (paper's node: 16 cores/socket)."""
+    return np.ceil(np.asarray(cores) / cores_per_socket).astype(np.int32)
+
+
+def energy_grid(
+    power_model: PowerModel,
+    perf_model: svr_mod.SVRParams,
+    *,
+    frequencies: Sequence[float],
+    cores: Sequence[int],
+    input_size: float,
+    cores_per_socket: int = 16,
+):
+    """Evaluate E = P × T on the full (f, p) grid. Returns (F, P, T, W, E)."""
+    F, P = np.meshgrid(np.asarray(frequencies), np.asarray(cores), indexing="ij")
+    S = sockets_for_cores(P, cores_per_socket)
+    N = np.full_like(F, float(input_size))
+    feats = np.stack([F.ravel(), P.ravel(), N.ravel()], axis=1)
+    T = np.asarray(svr_mod.predict(perf_model, feats)).reshape(F.shape)
+    T = np.maximum(T, 1e-6)  # SVR extrapolation may dip non-physical
+    W = np.asarray(power_model(jnp.asarray(F), jnp.asarray(P), jnp.asarray(S)))
+    E = W * T
+    return F, P, T, W, E
+
+
+def minimize_energy(
+    power_model: PowerModel,
+    perf_model: svr_mod.SVRParams,
+    *,
+    frequencies: Sequence[float],
+    cores: Sequence[int],
+    input_size: float,
+    cores_per_socket: int = 16,
+    constraints: Optional[Constraints] = None,
+) -> Configuration:
+    """Paper Eq. (8): argmin_{f,p} P(f,p,s(p)) × SVR(f,p,N)."""
+    F, P, T, W, E = energy_grid(
+        power_model,
+        perf_model,
+        frequencies=frequencies,
+        cores=cores,
+        input_size=input_size,
+        cores_per_socket=cores_per_socket,
+    )
+    mask = np.ones_like(E, dtype=bool)
+    if constraints is not None:
+        if constraints.max_time_s is not None:
+            mask &= T <= constraints.max_time_s
+        if constraints.max_cores is not None:
+            mask &= P <= constraints.max_cores
+        if constraints.min_frequency_ghz is not None:
+            mask &= F >= constraints.min_frequency_ghz
+        if constraints.max_frequency_ghz is not None:
+            mask &= F <= constraints.max_frequency_ghz
+    if not mask.any():
+        raise ValueError("constraints admit no configuration on the grid")
+    E_masked = np.where(mask, E, np.inf)
+    idx = np.unravel_index(np.argmin(E_masked), E.shape)
+    S = sockets_for_cores(np.array(P[idx]), cores_per_socket)
+    return Configuration(
+        frequency_ghz=float(F[idx]),
+        cores=int(P[idx]),
+        sockets=int(S),
+        predicted_time_s=float(T[idx]),
+        predicted_power_w=float(W[idx]),
+        predicted_energy_j=float(E[idx]),
+    )

@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: flash attention (online softmax, causal / sliding window).
+
+Forward-only kernel; gradients flow through a recompute-based VJP wired in
+``ops.flash_attention`` (the oracle's chunked jnp path is used for the
+backward — correct, memory-lean, and keeps the kernel surface small).
+
+Layout: inputs are reshaped to (BH, S, D) by the wrapper (GQA expansion
+happens in the wrapper so the kernel sees matched head counts). Grid is
+(BH, n_q_blocks, n_kv_blocks) with dimension order chosen so the kv axis is
+the innermost (sequential) axis: the online-softmax running state for one
+(bh, q_block) lives in VMEM scratch across kv iterations.
+
+VMEM per instance (block_q = block_k = 512, d = 128, f32 compute):
+  q (512x128) 256 KiB + k + v (512 KiB) + s/p (512x512) 1 MiB
+  + acc (512x128) 256 KiB + m/l (2x512x1) ~ 2.1 MiB  « 16 MiB.
+MXU work per instance: 2·bq·bk·d + 2·bq·bk·d FLOPs on 128-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, bq, d)
+    k_ref,  # (1, bk, d)
+    v_ref,  # (1, bk, d)
+    o_ref,  # (1, bq, d)
+    acc_ref,  # (bq, d) f32 scratch
+    m_ref,  # (bq, 1) f32 scratch
+    l_ref,  # (bq, 1) f32 scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+
+    # Block-level early-out: skip kv blocks that are entirely masked.
+    # causal: whole block in the future;  window: whole block too old.
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * scale  # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # rows fully masked -> exp(NEG_INF-m) ~ 0
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "scale",
+        "q_offset",
+        "kv_len",
+        "block_q",
+        "block_k",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (bh, sq, d)
+    k: jnp.ndarray,  # (bh, skv, d)
+    v: jnp.ndarray,  # (bh, skv, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if kv_len is None:
+        kv_len = skv
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0))) if pk else v
+    nq = qp.shape[1] // bq
+    nk = kp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            kv_len=kv_len,
+            q_offset=q_offset,
+            block_q=bq,
+            block_k=bk,
+        ),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((bq, d), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (works on TPU and in interpret mode)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: blockwise symmetric int8 quantize/dequantize.
+
+Used by the gradient-compression path (``optim/compress.py``): cross-pod
+gradient all-reduces at 2+ pods ride the slow DCN links, so gradients are
+quantized to int8 with per-256-element scales (4.03x compression) and an
+error-feedback residual keeps convergence unbiased.
+
+Grid: 1-D over row-groups of the (nb, block) reshaped tensor. Per-instance
+VMEM (rows=64, block=256): in 64 KiB + q 16 KiB + scales < 1 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (rows, block)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows", "interpret"))
+def int8_quantize_pallas(
+    x: jnp.ndarray, *, block: int = 256, rows: int = 64, interpret: bool = False
+):
+    """x: flat (n,) -> (q int8 (nb*block,), scales f32 (nb,)). Pads to fit."""
+    n = x.shape[0]
+    pad = (-n) % (block * rows)
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad))
+    nb = xf.shape[0] // block
+    xb = xf.reshape(nb, block)
+    grid = (nb // rows,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return q.reshape(-1), s.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "rows", "interpret"))
+def int8_dequantize_pallas(
+    q: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    n: int,
+    block: int = 256,
+    rows: int = 64,
+    interpret: bool = False,
+):
+    nb = scales.shape[0]
+    grid = (nb // rows,)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q.reshape(nb, block), scales.reshape(nb, 1))
+    return x.reshape(-1)[:n]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (state-space duality).
+
+The SSD chunked algorithm (arXiv:2405.21060) splits the sequence into chunks
+of length T and decomposes the output into
+  (a) an intra-chunk quadratic term  y_intra = (L ⊙ C Bᵀ) · (dt ⊙ x)
+  (b) a per-chunk input state        S_c = (decay_end ⊙ dt ⊙ B)ᵀ · x
+  (c) a cross-chunk recurrence       h_c = Π-decay · h_{c-1} + S_c
+  (d) a state-output term            y_state = (C ⊙ decay_in) · h_{c-1}
+
+(a) and (b) are the matmul-heavy, embarrassingly chunk-parallel parts — they
+run in this kernel on the MXU. (c) is an O(n_chunks) scan and (d) a skinny
+einsum; both stay in the jnp wrapper (``ops.ssd_scan``), matching the paper's
+own GPU decomposition where the sequential part is bandwidth-trivial.
+
+Grid: (B·H, n_chunks). Per-instance VMEM (T=128, p=64, n=128, f32):
+  x 32 KiB + B/C 128 KiB + L/CB (128x128) 128 KiB + outs ~ 100 KiB « 16 MiB.
+The kernel also emits C·decay_in (needed by (d)) so the wrapper never
+re-computes cumulative decays.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    x_ref,  # (1, 1, T, p)
+    dt_ref,  # (1, 1, T, 1)
+    a_ref,  # (1, 1, T, 1)   log-decay dt*A (negative)
+    b_ref,  # (1, 1, T, n)
+    c_ref,  # (1, 1, T, n)
+    y_ref,  # (1, 1, T, p)   intra-chunk output
+    s_ref,  # (1, 1, n, p)   chunk input-state
+    cd_ref,  # (1, 1, T, n)  C * decay_in  (for the state-output term)
+    dk_ref,  # (1, 1, 1, 1)  total chunk decay
+):
+    T = x_ref.shape[2]
+    x = x_ref[0, 0].astype(jnp.float32)  # (T, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (T, 1)
+    a = a_ref[0, 0].astype(jnp.float32)  # (T, 1)
+    B = b_ref[0, 0].astype(jnp.float32)  # (T, n)
+    C = c_ref[0, 0].astype(jnp.float32)  # (T, n)
+
+    a_cum = jnp.cumsum(a, axis=0)  # (T, 1)
+    # segment sums: seg[i, j] = a_cum[i] - a_cum[j] (decay from j+1..i)
+    seg = a_cum - a_cum.reshape(1, T)  # (T, T) via broadcast of (T,1)-(1,T)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)  # (T, T) decay mask
+
+    CB = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T, T)
+    M = CB * L * dt.reshape(1, T)
+    y_ref[0, 0] = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(a_cum[T - 1] - a_cum)  # (T, 1)
+    Bw = B * (decay_end * dt)  # (T, n)
+    s_ref[0, 0] = jax.lax.dot_general(
+        Bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(s_ref.dtype)  # (n, p)
+
+    cd_ref[0, 0] = (C * jnp.exp(a_cum)).astype(cd_ref.dtype)
+    dk_ref[0, 0] = jnp.exp(a_cum[T - 1]).reshape(1, 1).astype(dk_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunks_pallas(
+    x: jnp.ndarray,  # (bh, nc, T, p)
+    dt: jnp.ndarray,  # (bh, nc, T)
+    a: jnp.ndarray,  # (bh, nc, T)  log decays (dt * A)
+    B: jnp.ndarray,  # (bh, nc, T, n)
+    C: jnp.ndarray,  # (bh, nc, T, n)
+    *,
+    chunk: int,
+    interpret: bool = False,
+):
+    """Returns (y_intra, states, c_decay, chunk_decay) per chunk."""
+    bh, nc, T, p = x.shape
+    n = B.shape[-1]
+    assert T == chunk
+    grid = (bh, nc)
+    kernel = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, T, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, T, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, T, n), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, T, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, T, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, T, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return kernel(
+        x,
+        dt[..., None],
+        a[..., None],
+        B,
+        C,
+    )

@@ -1,0 +1,347 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+Why parse text? Two XLA facts force it:
+  1. ``compiled.cost_analysis()`` visits a while body ONCE — an 80-layer
+     ``lax.scan`` under-reports FLOPs/bytes by ~80x (verified empirically).
+  2. collective bytes are not in cost_analysis at all.
+
+This module parses ``compiled.as_text()`` into computations, resolves every
+op's result shape (and operand shapes via the per-computation symbol table),
+and accumulates, **multiplied through while-loop trip counts**:
+
+  * dot FLOPs:          2 x prod(result shape) x prod(contracting dims)
+  * collective bytes:   result-shape bytes per all-reduce / all-gather /
+                        reduce-scatter / all-to-all / collective-permute
+                        (async -start counted, -done skipped)
+  * memory bytes:       operands + result of ops in control-flow-reachable
+                        computations (fusion internals excluded — the fusion
+                        call site already accounts its operands/results)
+
+Trip counts come from the while condition: the largest integer literal in a
+``compare`` against the induction variable. Falls back to 1 (and records a
+warning) when no constant is found.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "s4": 1,
+    "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(text):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    result_text: str  # the "f32[8,128]{1,0}" part (may be a tuple)
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+    symbols: Dict[str, str]  # op name -> result text
+
+
+_OPCODE_RE = re.compile(r"^\s*(?:\(|)([a-z0-9\-]+)")
+
+
+def _parse_op(line: str) -> Optional[OpInfo]:
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    # result text = everything up to the opcode call
+    call = re.search(r"([a-z][a-z0-9\-]*)\(", rest)
+    if not call:
+        return None
+    opcode = call.group(1)
+    result_text = rest[: call.start()]
+    # operand names
+    args_start = call.end()
+    depth = 1
+    i = args_start
+    while i < len(rest) and depth > 0:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    args_text = rest[args_start : i - 1]
+    operands = re.findall(r"%([\w\.\-]+)", args_text)
+    return OpInfo(name, result_text, opcode, operands, line=rest)
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                current = Computation(hdr.group(1), [], {})
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry_name = current.name
+                # parameters can be declared in the header; ignore
+                continue
+            current = None
+            continue
+        if current is None:
+            continue
+        op = _parse_op(line)
+        if op is None:
+            continue
+        current.ops.append(op)
+        current.symbols[op.name] = op.result_text
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Largest int literal in a compare of the condition computation."""
+    best = None
+    for op in cond.ops:
+        for lit in re.findall(r"constant\((\d+)\)", op.line):
+            v = int(lit)
+            if best is None or v > best:
+                best = v
+    return best
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    """2 x prod(result) x prod(contracting dims of lhs)."""
+    res = _shapes_in(op.result_text)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for s in res[0][1]:
+        out_elems *= s
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_text = comp.symbols.get(op.operands[0], "")
+    lhs_shapes = _shapes_in(lhs_text)
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    lhs = lhs_shapes[0][1]
+    k = 1
+    for d in cdims:
+        if d < len(lhs):
+            k *= lhs[d]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    memory_bytes: float = 0.0
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+
+def analyze(hlo_text: str) -> RooflineCounts:
+    comps = parse_computations(hlo_text)
+    entry = comps.get("__entry__")
+    out = RooflineCounts()
+    if entry is None:
+        out.warnings.append("no ENTRY computation found")
+        return out
+
+    # multipliers: computation name -> total trips across call chains
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    # BFS through control-flow edges
+    order = [entry.name]
+    seen = {entry.name}
+    fusion_reached: Dict[str, float] = defaultdict(float)  # for flops only
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                trips = None
+                if cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                if trips is None:
+                    trips = 1
+                    out.warnings.append(f"while in {cname}: trip count unknown")
+                if bm:
+                    b = bm.group(1)
+                    mult[b] += m * trips
+                    if b not in seen:
+                        seen.add(b)
+                        order.append(b)
+            elif op.opcode in ("call", "conditional", "async-start"):
+                for ref in re.findall(
+                    r"(?:to_apply|called_computations=\{|branch_computations=\{)%?([\w\.\-]+)",
+                    op.line,
+                ):
+                    mult[ref] += m
+                    if ref not in seen:
+                        seen.add(ref)
+                        order.append(ref)
+            elif op.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                if fm:
+                    fusion_reached[fm.group(1)] += m
+
+    # fusions can nest; propagate (rare on CPU, cheap to do one level deep)
+    for fname, fm_mult in list(fusion_reached.items()):
+        comp = comps.get(fname)
+        if not comp:
+            continue
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                nm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                if nm:
+                    fusion_reached[nm.group(1)] += fm_mult
+
+    # --- accumulate
+    def account_flops(comp: Computation, m: float):
+        for op in comp.ops:
+            if op.opcode == "dot":
+                out.flops += m * _dot_flops(op, comp)
+
+    def _fusion_operand_bytes(comp: Computation, op: OpInfo) -> float:
+        """Effective read bytes of a fusion: parameters that are only
+        dynamic-sliced inside count their SLICE size (a scan body slicing
+        one layer from the stacked weights reads one layer, not G — counting
+        the full operand per trip would overcount by G^2)."""
+        fm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        fcomp = comps.get(fm.group(1)) if fm else None
+        if fcomp is None:
+            return sum(_nbytes(comp.symbols.get(o, "")) for o in op.operands)
+        # param index -> sliced size (if dynamic-sliced/gathered inside)
+        param_order = [o for o in fcomp.ops if o.opcode == "parameter"]
+        sliced: Dict[str, float] = {}
+        for fop in fcomp.ops:
+            if fop.opcode in ("dynamic-slice", "gather") and fop.operands:
+                sliced[fop.operands[0]] = _nbytes(fop.result_text)
+        total = 0.0
+        for i, o in enumerate(op.operands):
+            pname = param_order[i].name if i < len(param_order) else None
+            if pname is not None and pname in sliced:
+                total += sliced[pname]
+            else:
+                total += _nbytes(comp.symbols.get(o, ""))
+        return total
+
+    def _op_memory_bytes(comp: Computation, op: OpInfo) -> float:
+        res = _nbytes(op.result_text)
+        if op.opcode in ("dynamic-slice", "gather"):
+            return 2.0 * res  # read the slice, write the slice
+        if op.opcode == "dynamic-update-slice":
+            upd = (
+                _nbytes(comp.symbols.get(op.operands[1], ""))
+                if len(op.operands) > 1
+                else res
+            )
+            return 2.0 * upd  # in-place: read+write the updated region
+        if op.opcode in ("parameter", "constant", "get-tuple-element", "tuple",
+                         "bitcast", "reshape"):
+            return 0.0  # no data movement (layout-preserving / bookkeeping)
+        if op.opcode == "fusion":
+            return _fusion_operand_bytes(comp, op) + res
+        opb = sum(_nbytes(comp.symbols.get(o, "")) for o in op.operands)
+        return opb + res
+
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None or m <= 0:
+            continue
+        account_flops(comp, m)
+        for op in comp.ops:
+            if op.opcode.endswith("-done"):
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = _nbytes(op.result_text)
+                # XLA:CPU's all-reduce-promotion pass rewrites every bf16
+                # all-reduce as convert->f32 AR->convert (no bf16 arithmetic
+                # on CPU); the TPU target reduces natively in bf16. Count
+                # promoted ARs at their pre-promotion width.
+                if base == "all-reduce" and re.search(r"to_apply=%?\S*prom", op.line):
+                    b /= 2
+                out.collective_bytes += m * b
+                out.collectives[base] += m * b
+            out.memory_bytes += m * _op_memory_bytes(comp, op)
+
+    for fname, m in fusion_reached.items():
+        comp = comps.get(fname)
+        if comp is None or m <= 0:
+            continue
+        account_flops(comp, m)
+
+    out.collectives = dict(out.collectives)
+    return out

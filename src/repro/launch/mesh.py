@@ -1,0 +1,42 @@
+"""Mesh construction for single-pod / multi-pod targets.
+
+Production target: TPU v5e, 256 chips/pod. Single-pod mesh is (16, 16) over
+("data", "model"); the 2-pod mesh adds a leading "pod" axis — batch shards
+over ("pod", "data") and cross-pod collectives ride DCN.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run pins the device count via
+XLA_FLAGS before any jax import, smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Mesh over the first prod(shape) devices (the dry-run process exposes
+    512 placeholder devices; the single-pod mesh uses the first 256)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), tuple(axes))
+
+
+def describe(mesh) -> str:
+    return "x".join(
+        f"{n}={s}" for n, s in zip(mesh.axis_names, mesh.devices.shape)
+    )

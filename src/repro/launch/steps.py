@@ -1,0 +1,168 @@
+"""Lowerable step functions: train_step / prefill / serve_step per arch.
+
+These are what the launcher jits and the dry-run lowers. Sharding of every
+input/output comes from parallel/sharding.py; the activation-sharding policy
+(sequence parallelism for head-indivisible archs) is installed around
+tracing via parallel.context.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import SHAPES, ArchDef
+from repro.optim import adamw
+from repro.parallel import context as pctx
+from repro.parallel import sharding as shd
+
+
+def make_train_step(
+    arch: ArchDef,
+    cfg,
+    opt_cfg: adamw.AdamWConfig,
+    zero_shardings=None,
+    accum: int = 1,
+):
+    """``zero_shardings``: optional NamedSharding tree (the ZeRO-1 moment
+    layout). Constraining the freshly-cast bf16 params to it pins the
+    optimizer math to the ZeRO shards and forces the param all-GATHER to
+    happen on the bf16 tensor — without it XLA gathers the f32 update
+    (2x DCN/ICI bytes; see EXPERIMENTS.md §Perf).
+
+    ``accum``: gradient-accumulation microbatches — splits the batch axis,
+    scans loss+grad per microbatch and averages. Divides peak activation
+    memory by ``accum`` at the cost of one extra grads-sized buffer."""
+
+    def grad_of(params, batch):
+        def loss_of(p):
+            return arch.loss_fn(cfg, p, batch)
+
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            # split the MINOR portion of the batch axis: microbatch i takes
+            # every accum-th row, so each device contributes rows to every
+            # microbatch and the data sharding is preserved. (Splitting the
+            # major portion puts microbatch 0 on the first 1/accum of the
+            # data axis — XLA then reshards every activation every layer:
+            # +100 GB/device of collectives on a 130M model. §Perf M2.)
+            micro = jax.tree_util.tree_map(
+                lambda x: jnp.moveaxis(
+                    x.reshape((x.shape[0] // accum, accum) + x.shape[1:]), 1, 0
+                ),
+                batch,
+            )
+
+            def mb_step(carry, mb):
+                gsum, lsum = carry
+                (loss, parts), grads = grad_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return (gsum, lsum + loss), parts
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), parts_all = jax.lax.scan(
+                mb_step, (gzero, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            parts = jax.tree_util.tree_map(lambda x: x.mean(), parts_all)
+        else:
+            (loss, parts), grads = grad_of(params, batch)
+        new_params, new_state, metrics = adamw.update(opt_cfg, params, grads, opt_state)
+        if zero_shardings is not None:
+            new_params = jax.tree_util.tree_map(
+                lambda p, s: jax.lax.with_sharding_constraint(p, s),
+                new_params,
+                zero_shardings,
+            )
+        out_metrics = {"loss": loss, **{k: v for k, v in parts.items()}, **metrics}
+        return new_params, new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill(arch: ArchDef, cfg, *, max_cache_len: int):
+    def prefill_step(params, batch):
+        return arch.prefill(cfg, params, batch, max_cache_len=max_cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(arch: ArchDef, cfg):
+    """One decode step: greedy next token against the caches."""
+
+    def serve_step(params, caches, token):
+        caches, logits = arch.decode_step(cfg, params, caches, token)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return caches, next_tok, logits
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings for each entry point
+# ---------------------------------------------------------------------------
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def abstract_train_state(arch: ArchDef, cfg):
+    """(params, opt_state) as ShapeDtypeStructs via eval_shape (no alloc)."""
+    params = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0), cfg))
+    opt_state = jax.eval_shape(adamw.init, params)
+    return params, opt_state
+
+
+def train_shardings(arch: ArchDef, cfg, mesh: Mesh, cell, params_abs, opt_abs, batch_abs):
+    pspec = shd.param_specs(params_abs, arch, mesh)
+    ospec = shd.opt_state_specs(opt_abs, pspec, mesh)
+    bspec = shd.batch_specs(batch_abs, cell, mesh)
+    return named(mesh, pspec), named(mesh, ospec), named(mesh, bspec)
+
+
+def activation_policy(arch: ArchDef, cell, mesh: Mesh):
+    spec = shd.activation_spec(arch, cell, mesh)
+    if spec is None:
+        return pctx.activation_sharding(None)
+    return pctx.activation_sharding(NamedSharding(mesh, spec))
+
+
+def fsdp_policy(arch: ArchDef, cfg, mesh: Mesh, params_abs):
+    """When FSDP sharded any scanned weight, install the per-group gather
+    constraint (TP-only slice specs) so XLA all-gathers ONE layer-group per
+    scan iteration instead of materializing the gathered stack."""
+    from jax.sharding import PartitionSpec as P
+
+    isleaf = lambda x: isinstance(x, P)
+    full = shd.param_specs(params_abs, arch, mesh, fsdp=True)
+    tp = shd.param_specs(params_abs, arch, mesh, fsdp=False)
+    same = jax.tree_util.tree_all(
+        jax.tree_util.tree_map(
+            lambda a, b: tuple(a) == tuple(b), full, tp, is_leaf=isleaf
+        )
+    )
+    if same or not (isinstance(tp, dict) and "blocks" in tp):
+        return contextlib.nullcontext()
+    slice_specs = jax.tree_util.tree_map(
+        lambda sp: P(*tuple(sp)[1:]) if len(tuple(sp)) > 0 else sp,
+        tp["blocks"],
+        is_leaf=isleaf,
+    )
+    return pctx.param_gather_sharding(named(mesh, slice_specs))

@@ -1,0 +1,190 @@
+"""GQA multi-head attention block (functional), with KV-cache decode paths.
+
+Self-attention supports:
+  * grouped-query heads (n_kv_heads <= n_heads), MQA included
+  * RoPE (configurable theta), optional QKV biases (qwen1.5)
+  * causal, bidirectional (encoder) and sliding-window (gemma3 local) masks
+  * prefill -> returns a KV cache; decode -> one-token step into the cache
+
+The inner attention product goes through ``kernels.ops.flash_attention``
+(Pallas on TPU, chunked online-softmax reference elsewhere) — the reference
+never materializes (S, S) scores, which keeps 32k-prefill dry-run memory
+honest. Cross-attention (whisper decoder) reuses the same projections with
+an externally supplied KV pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    causal: bool = True
+    window: Optional[int] = None  # sliding-window size (None = global)
+    use_rope: bool = True
+
+
+def init(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": common.linear_init(
+            ks[0], cfg.d_model, cfg.n_heads * cfg.d_head, bias=cfg.qkv_bias, dtype=dtype
+        ),
+        "k": common.linear_init(
+            ks[1], cfg.d_model, cfg.n_kv_heads * cfg.d_head, bias=cfg.qkv_bias, dtype=dtype
+        ),
+        "v": common.linear_init(
+            ks[2], cfg.d_model, cfg.n_kv_heads * cfg.d_head, bias=cfg.qkv_bias, dtype=dtype
+        ),
+        "o": common.linear_init(
+            ks[3], cfg.n_heads * cfg.d_head, cfg.d_model, bias=False, dtype=dtype
+        ),
+    }
+
+
+def _split_heads(x, n, d):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, d).transpose(0, 2, 1, 3)  # (b, h, s, d)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def cache_len(cfg: AttnConfig, max_len: int) -> int:
+    """Sliding-window layers keep a RING cache of `window` slots — a local
+    layer never needs keys older than the window, so a 500k-context decode
+    carries 1024 slots instead of 524288 (the memory and collective win that
+    makes gemma3's 5:1 pattern pay off; EXPERIMENTS.md §Perf)."""
+    if cfg.window is not None:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def make_cache(cfg: AttnConfig, batch: int, max_len: int, dtype):
+    """Preallocated KV cache (ring-buffer-sized for windowed layers)."""
+    shape = (batch, cfg.n_kv_heads, cache_len(cfg, max_len), cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def forward(
+    p,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # (b, s, d_model)
+    *,
+    positions: Optional[jnp.ndarray] = None,  # (s,)
+    return_cache: bool = False,
+    max_cache_len: Optional[int] = None,
+    kv_input: Optional[jnp.ndarray] = None,  # cross-attention source
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    kv_src = x if kv_input is None else kv_input
+    s_kv = kv_src.shape[1]
+    q = _split_heads(common.linear(p["q"], x), cfg.n_heads, cfg.d_head)
+    k = _split_heads(common.linear(p["k"], kv_src), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(common.linear(p["v"], kv_src), cfg.n_kv_heads, cfg.d_head)
+    if cfg.use_rope and kv_input is None:
+        pos = jnp.arange(s) if positions is None else positions
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    out = ops.flash_attention(
+        q, k, v, causal=cfg.causal and kv_input is None, window=cfg.window
+    )
+    out = common.linear(p["o"], _merge_heads(out))
+    if not return_cache:
+        return out
+    max_len = max_cache_len or s_kv
+    cache = make_cache(cfg, b, max_len, k.dtype)
+    L = cache["k"].shape[2]
+    if s_kv <= L:
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    else:
+        # ring layout: position p lives at slot p % L; the last L keys of the
+        # prompt land rotated so decode's (idx % L) writes line up.
+        shift = s_kv % L
+        cache["k"] = jnp.roll(k[:, :, -L:, :], shift, axis=2)
+        cache["v"] = jnp.roll(v[:, :, -L:, :], shift, axis=2)
+    cache["idx"] = jnp.asarray(s_kv, jnp.int32)
+    return out, cache
+
+
+def decode_step(
+    p,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # (b, 1, d_model)
+    cache,
+):
+    """One-token causal decode against the cache (self-attention archs).
+
+    Windowed layers use a RING cache of `window` slots: write at idx % L,
+    attend over min(idx+1, L) valid slots. RoPE is applied at the key's TRUE
+    position before it is stored, and attention is permutation-invariant
+    over keys, so ring order needs no unrotation."""
+    b = x.shape[0]
+    idx = cache["idx"]
+    L = cache["k"].shape[2]
+    ring = cfg.window is not None and L == min(cfg.window, L)
+    q = _split_heads(common.linear(p["q"], x), cfg.n_heads, cfg.d_head)
+    k = _split_heads(common.linear(p["k"], x), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(common.linear(p["v"], x), cfg.n_kv_heads, cfg.d_head)
+    if cfg.use_rope:
+        pos = jnp.full((1,), idx, jnp.int32)
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    if cfg.window is not None:
+        slot = idx % L
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        out = ops.flash_attention(
+            q,
+            new_k,
+            new_v,
+            causal=False,
+            window=None,  # every ring slot is inside the window by construction
+            q_offset=0,
+            kv_len=jnp.minimum(idx + 1, L),
+        )
+    else:
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, idx, 0))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, idx, 0))
+        out = ops.flash_attention(
+            q,
+            new_k,
+            new_v,
+            causal=False,  # past-only masking comes from kv_len
+            window=None,
+            q_offset=idx,
+            kv_len=idx + 1,
+        )
+    out = common.linear(p["o"], _merge_heads(out))
+    return out, {"k": new_k, "v": new_v, "idx": idx + 1}
+
+
+def cross_decode_step(p, cfg: AttnConfig, x: jnp.ndarray, cache):
+    """Cross-attention during decode: static KV from the encoder cache."""
+    q = _split_heads(common.linear(p["q"], x), cfg.n_heads, cfg.d_head)
+    out = ops.flash_attention(
+        q, cache["k"], cache["v"], causal=False, kv_len=cache["idx"]
+    )
+    return common.linear(p["o"], _merge_heads(out))

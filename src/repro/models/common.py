@@ -1,0 +1,180 @@
+"""Functional neural-net primitives (no flax — params are plain pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; configs are frozen dataclasses.
+  * every layer is an (init, apply) pair of pure functions.
+  * compute dtype is configurable (bf16 for TPU targets); normalization
+    statistics, softmax and logits always run in float32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_INIT_STD = 0.02
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool, dtype, std=None):
+    std = DEFAULT_INIT_STD if std is None else std
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, *, dtype, std=None):
+    std = DEFAULT_INIT_STD if std is None else std
+    return {"table": (jax.random.normal(key, (vocab, d)) * std).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied unembedding: bf16 operands, f32 MXU accumulation.
+
+    (Perf: upcasting operands to f32 before the matmul doubles the weight
+    read AND makes the data-parallel dW all-reduce f32 — preferred_element
+    _type gives f32 logits with bf16 wires; see EXPERIMENTS.md §Perf.)"""
+    return jax.lax.dot_general(
+        x,
+        p["table"],
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def linear_f32out(p, x):
+    """Linear with f32 accumulation/output, bf16 operands (lm_head path)."""
+    y = jax.lax.dot_general(
+        x,
+        p["w"],
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, *, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, *, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """x: (b, h, s, d); positions: (s,) or (b, s)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., s, d/2)
+    if ang.ndim == 2:  # (s, d/2) -> broadcast over (b, h)
+        ang = ang[None, None]
+    else:  # (b, s, d/2)
+        ang = ang[:, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d: int, d_ff: int, *, gated: bool, bias: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(ks[0], d, d_ff, bias=bias, dtype=dtype),
+        "down": linear_init(ks[1], d_ff, d, bias=bias, dtype=dtype),
+    }
+    if gated:
+        p["gate"] = linear_init(ks[2], d, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, act: str):
+    h = linear(p["up"], x)
+    if "gate" in p:
+        h = activation(act)(linear(p["gate"], x)) * h
+    else:
+        h = activation(act)(h)
+    return linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Losses / misc
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask=None):
+    """Mean next-token CE in f32. logits (..., v) f32; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(tree) -> int:
+    return int(
+        sum(x.size for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "size"))
+    )

@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder backbone (audio arch, frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (b, n_frames, d_model) straight into the
+encoder (bidirectional attention, sinusoidal positions). The decoder is a
+standard causal stack with cross-attention into the encoder output and
+learned positional embeddings (whisper's layout). Both stacks scan over
+layers with remat.
+
+Entry points: forward (teacher-forced train), encode+prefill, decode_step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common
+from repro.parallel import context as pctx
+from repro.models.attention import AttnConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_enc_layers: int
+    n_dec_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    max_target_len: int = 448
+    norm: str = "layernorm"
+    act: str = "gelu"
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+
+    def enc_attn(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.d_head,
+            causal=False,
+            use_rope=False,
+        )
+
+    def dec_self_attn(self) -> AttnConfig:
+        return dataclasses.replace(self.enc_attn(), causal=True)
+
+    def cross_attn(self) -> AttnConfig:
+        return self.enc_attn()
+
+
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "attn": attention.init(ks[0], cfg.enc_attn(), cfg.dtype),
+        "ln2": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "mlp": common.mlp_init(
+            ks[1], cfg.d_model, cfg.d_ff, gated=False, bias=True, dtype=cfg.dtype
+        ),
+    }
+
+
+def _dec_block_init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "self": attention.init(ks[0], cfg.dec_self_attn(), cfg.dtype),
+        "ln_x": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "cross": attention.init(ks[1], cfg.cross_attn(), cfg.dtype),
+        "ln2": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "mlp": common.mlp_init(
+            ks[2], cfg.d_model, cfg.d_ff, gated=False, bias=True, dtype=cfg.dtype
+        ),
+    }
+
+
+def init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+        "tok_embed": common.embed_init(ks[2], cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "pos_embed": common.embed_init(
+            ks[3], cfg.max_target_len, cfg.d_model, dtype=cfg.dtype
+        ),
+        "enc_final": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+        "dec_final": common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype),
+    }
+
+
+def encode(cfg: EncDecConfig, params, frames: jnp.ndarray):
+    """frames: (b, s_frames, d_model) precomputed frame embeddings (stub)."""
+    h = frames.astype(cfg.dtype) + _sinusoid(frames.shape[1], cfg.d_model).astype(
+        cfg.dtype
+    )
+
+    def block(h, p):
+        a = attention.forward(
+            p["attn"], cfg.enc_attn(), common.apply_norm(p["ln1"], h, kind=cfg.norm)
+        )
+        h = h + a
+        y = common.mlp(
+            p["mlp"], common.apply_norm(p["ln2"], h, kind=cfg.norm), act=cfg.act
+        )
+        return pctx.constrain(h + y), None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    h, _ = jax.lax.scan(body, pctx.constrain(h), params["enc_blocks"])
+    return common.apply_norm(params["enc_final"], h, kind=cfg.norm)
+
+
+def _decode_stack(cfg: EncDecConfig, params, h, enc_out, positions):
+    def block(carry, p):
+        h = carry
+        a = attention.forward(
+            p["self"],
+            cfg.dec_self_attn(),
+            common.apply_norm(p["ln1"], h, kind=cfg.norm),
+            positions=positions,
+        )
+        h = h + a
+        x = attention.forward(
+            p["cross"],
+            cfg.cross_attn(),
+            common.apply_norm(p["ln_x"], h, kind=cfg.norm),
+            kv_input=enc_out,
+        )
+        h = h + x
+        y = common.mlp(
+            p["mlp"], common.apply_norm(p["ln2"], h, kind=cfg.norm), act=cfg.act
+        )
+        return h + y, None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    return h
+
+
+def forward(cfg: EncDecConfig, params, frames, tokens):
+    """Teacher-forced training forward -> logits (b, s_tok, vocab) f32."""
+    enc_out = encode(cfg, params, frames)
+    s = tokens.shape[1]
+    pos = jnp.arange(s)
+    h = common.embed(params["tok_embed"], tokens) + common.embed(
+        params["pos_embed"], pos % cfg.max_target_len
+    )
+    h = _decode_stack(cfg, params, h, enc_out, pos)
+    h = common.apply_norm(params["dec_final"], h, kind=cfg.norm)
+    return common.unembed(params["tok_embed"], h)
+
+
+def loss_fn(cfg: EncDecConfig, params, batch):
+    logits = forward(cfg, params, batch["frames"], batch["tokens"])
+    return common.cross_entropy(logits, batch["labels"], batch.get("mask")), {}
+
+
+def prefill(cfg: EncDecConfig, params, frames, tokens, *, max_cache_len: int):
+    """Encode + teacher-forced pass over the prompt, building decode caches."""
+    enc_out = encode(cfg, params, frames)
+    s = tokens.shape[1]
+    pos = jnp.arange(s)
+    h = common.embed(params["tok_embed"], tokens) + common.embed(
+        params["pos_embed"], pos % cfg.max_target_len
+    )
+
+    def block(h, p):
+        z = common.apply_norm(p["ln1"], h, kind=cfg.norm)
+        a, self_cache = attention.forward(
+            p["self"],
+            cfg.dec_self_attn(),
+            z,
+            positions=pos,
+            return_cache=True,
+            max_cache_len=max_cache_len,
+        )
+        h = h + a
+        zx = common.apply_norm(p["ln_x"], h, kind=cfg.norm)
+        x, cross_cache = attention.forward(
+            p["cross"], cfg.cross_attn(), zx, kv_input=enc_out, return_cache=True
+        )
+        h = h + x
+        y = common.mlp(
+            p["mlp"], common.apply_norm(p["ln2"], h, kind=cfg.norm), act=cfg.act
+        )
+        return h + y, {"self": self_cache, "cross": cross_cache}
+
+    h, caches = jax.lax.scan(block, h, params["dec_blocks"])
+    h = common.apply_norm(params["dec_final"], h[:, -1:, :], kind=cfg.norm)
+    return caches, common.unembed(params["tok_embed"], h)
+
+
+def init_caches(cfg: EncDecConfig, batch: int, max_len: int, enc_len: int):
+    def one(_):
+        return {
+            "self": attention.make_cache(cfg.dec_self_attn(), batch, max_len, cfg.dtype),
+            "cross": attention.make_cache(cfg.cross_attn(), batch, enc_len, cfg.dtype),
+        }
+
+    return jax.vmap(one)(jnp.arange(cfg.n_dec_layers))
+
+
+def decode_step(cfg: EncDecConfig, params, caches, token):
+    """token (b, 1) -> (caches, logits). Cross-KV comes from the caches."""
+    h = common.embed(params["tok_embed"], token)
+    # position = current self-cache fill (identical across layers; take layer 0)
+    pos_idx = caches["self"]["idx"][0]
+    h = h + common.embed(params["pos_embed"], (pos_idx % cfg.max_target_len)[None])
+
+    def block(h, xs):
+        p, cache = xs
+        z = common.apply_norm(p["ln1"], h, kind=cfg.norm)
+        a, self_cache = attention.decode_step(p["self"], cfg.dec_self_attn(), z, cache["self"])
+        h = h + a
+        zx = common.apply_norm(p["ln_x"], h, kind=cfg.norm)
+        x = attention.cross_decode_step(p["cross"], cfg.cross_attn(), zx, cache["cross"])
+        h = h + x
+        y = common.mlp(
+            p["mlp"], common.apply_norm(p["ln2"], h, kind=cfg.norm), act=cfg.act
+        )
+        return h + y, {"self": self_cache, "cross": cache["cross"]}
+
+    h, new_caches = jax.lax.scan(block, h, (params["dec_blocks"], caches))
+    h = common.apply_norm(params["dec_final"], h, kind=cfg.norm)
+    return new_caches, common.unembed(params["tok_embed"], h)

@@ -1,0 +1,458 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid / VLM archs.
+
+A model is a repeating **super-block pattern** of block kinds:
+
+    "attn"   -- global attention + dense FFN        (llama-family)
+    "local"  -- sliding-window attention + FFN      (gemma3 local layers)
+    "moe"    -- global attention + top-k MoE FFN    (granite-moe, phi3.5-moe)
+    "mamba"  -- Mamba2 SSD block                    (mamba2, zamba2 backbone)
+
+e.g. gemma3-12b is pattern ("local",)*5 + ("attn",) x 8 groups; zamba2 is
+("mamba",)*3 x 27 groups with a weight-shared attention block invoked once
+per group (its Zamba signature). The layer stack runs under ``lax.scan``
+over groups with per-group ``jax.checkpoint`` (remat) — compact HLO, 512-way
+SPMD-compilable, and collective counting per trip through the scan body.
+
+Three entry points lower for the dry-run:
+    forward(cfg, params, tokens, images=None)            -> logits (train)
+    prefill(cfg, params, tokens, max_cache_len)          -> (caches, logits)
+    decode_step(cfg, params, caches, token)              -> (caches, logits)
+
+VLM (phi-3-vision): the CLIP frontend is a stub per the assignment —
+``images`` arrives as precomputed patch embeddings (b, n_patches, d_vision),
+linearly projected and prepended to the token sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, mamba2, moe
+from repro.parallel import context as pctx
+from repro.models.attention import AttnConfig
+from repro.models.mamba2 import Mamba2Config
+from repro.models.moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStub:
+    n_patches: int
+    d_vision: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    pattern: Tuple[str, ...]  # super-block; n_layers % len(pattern) == 0
+    attn: Optional[AttnConfig] = None
+    local_window: Optional[int] = None
+    d_ff: int = 0
+    mlp_gated: bool = True
+    moe_cfg: Optional[MoEConfig] = None
+    mamba_cfg: Optional[Mamba2Config] = None
+    shared_attn: bool = False  # zamba2: weight-shared attn block per group
+    norm: str = "rmsnorm"
+    act: str = "silu"
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    vision: Optional[VisionStub] = None
+    remat: bool = True
+    scan_nest: int = 1  # >1: two-level scan (outer size) — nested remat
+    moe_aux_weight: float = 0.01
+    moe_z_weight: float = 1e-3
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            self.n_layers,
+            self.pattern,
+        )
+        return self.n_layers // len(self.pattern)
+
+    def local_attn(self) -> AttnConfig:
+        return dataclasses.replace(self.attn, window=self.local_window)
+
+
+# ---------------------------------------------------------------------------
+# single-block init/apply
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: LMConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.dtype
+    if kind in ("attn", "local", "moe"):
+        acfg = cfg.local_attn() if kind == "local" else cfg.attn
+        p = {
+            "ln1": common.norm_init(d, kind=cfg.norm, dtype=dt),
+            "attn": attention.init(ks[0], acfg, dt),
+            "ln2": common.norm_init(d, kind=cfg.norm, dtype=dt),
+        }
+        if kind == "moe":
+            p["moe"] = moe.init(ks[1], cfg.moe_cfg, dt)
+        else:
+            p["mlp"] = common.mlp_init(
+                ks[1], d, cfg.d_ff, gated=cfg.mlp_gated, bias=False, dtype=dt
+            )
+        return p
+    if kind == "mamba":
+        return {
+            "ln": common.norm_init(d, kind=cfg.norm, dtype=dt),
+            "mamba": mamba2.init(ks[0], cfg.mamba_cfg, dt),
+        }
+    raise ValueError(kind)
+
+
+def _attn_cfg(cfg: LMConfig, kind: str) -> AttnConfig:
+    return cfg.local_attn() if kind == "local" else cfg.attn
+
+
+def _block_forward(p, cfg: LMConfig, kind: str, h, positions, aux):
+    if kind in ("attn", "local", "moe"):
+        a = attention.forward(
+            p["attn"],
+            _attn_cfg(cfg, kind),
+            common.apply_norm(p["ln1"], h, kind=cfg.norm),
+            positions=positions,
+        )
+        h = h + a
+        z = common.apply_norm(p["ln2"], h, kind=cfg.norm)
+        if kind == "moe":
+            y, moe_aux = moe.forward(p["moe"], cfg.moe_cfg, z)
+            aux = {
+                "lb": aux["lb"] + moe_aux["load_balance_loss"],
+                "z": aux["z"] + moe_aux["router_z_loss"],
+            }
+        else:
+            y = common.mlp(p["mlp"], z, act=cfg.act)
+        return h + y, aux
+    if kind == "mamba":
+        y = mamba2.forward(p["mamba"], cfg.mamba_cfg, common.apply_norm(p["ln"], h, kind=cfg.norm))
+        return h + y, aux
+    raise ValueError(kind)
+
+
+def _block_cache_init(cfg: LMConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "local", "moe"):
+        return attention.make_cache(_attn_cfg(cfg, kind), batch, max_len, cfg.dtype)
+    if kind == "mamba":
+        return mamba2.make_state(cfg.mamba_cfg, batch, cfg.dtype)
+    raise ValueError(kind)
+
+
+def _block_prefill(p, cfg: LMConfig, kind: str, h, positions, max_len):
+    """Forward + produce this block's decode cache."""
+    if kind in ("attn", "local", "moe"):
+        z = common.apply_norm(p["ln1"], h, kind=cfg.norm)
+        a, cache = attention.forward(
+            p["attn"],
+            _attn_cfg(cfg, kind),
+            z,
+            positions=positions,
+            return_cache=True,
+            max_cache_len=max_len,
+        )
+        h = h + a
+        z2 = common.apply_norm(p["ln2"], h, kind=cfg.norm)
+        if kind == "moe":
+            y, _ = moe.forward(p["moe"], cfg.moe_cfg, z2)
+        else:
+            y = common.mlp(p["mlp"], z2, act=cfg.act)
+        return h + y, cache
+    if kind == "mamba":
+        y, state = mamba2.forward(
+            p["mamba"],
+            cfg.mamba_cfg,
+            common.apply_norm(p["ln"], h, kind=cfg.norm),
+            return_state=True,
+        )
+        return h + y, state
+    raise ValueError(kind)
+
+
+def _block_decode(p, cfg: LMConfig, kind: str, h, cache):
+    if kind in ("attn", "local", "moe"):
+        z = common.apply_norm(p["ln1"], h, kind=cfg.norm)
+        a, cache = attention.decode_step(p["attn"], _attn_cfg(cfg, kind), z, cache)
+        h = h + a
+        z2 = common.apply_norm(p["ln2"], h, kind=cfg.norm)
+        if kind == "moe":
+            y, _ = moe.forward(p["moe"], cfg.moe_cfg, z2)
+        else:
+            y = common.mlp(p["mlp"], z2, act=cfg.act)
+        return h + y, cache
+    if kind == "mamba":
+        y, cache = mamba2.decode_step(
+            p["mamba"], cfg.mamba_cfg, common.apply_norm(p["ln"], h, kind=cfg.norm), cache
+        )
+        return h + y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# shared (zamba-style) block
+# ---------------------------------------------------------------------------
+
+
+def _shared_init(key, cfg: LMConfig):
+    ks = jax.random.split(key, 3)
+    d, dt = cfg.d_model, cfg.dtype
+    return {
+        "in_proj": common.linear_init(ks[0], 2 * d, d, bias=False, dtype=dt),
+        "ln1": common.norm_init(d, kind=cfg.norm, dtype=dt),
+        "attn": attention.init(ks[1], cfg.attn, dt),
+        "ln2": common.norm_init(d, kind=cfg.norm, dtype=dt),
+        "mlp": common.mlp_init(
+            ks[2], d, cfg.d_ff, gated=cfg.mlp_gated, bias=False, dtype=dt
+        ),
+    }
+
+
+def _shared_forward(p, cfg: LMConfig, h, h0, positions):
+    """Zamba2 signature move: the SAME attention+MLP block (one weight copy)
+    is invoked once per group on concat(current, initial-embedding)."""
+    x = common.linear(p["in_proj"], jnp.concatenate([h, h0], axis=-1))
+    a = attention.forward(
+        p["attn"], cfg.attn, common.apply_norm(p["ln1"], x, kind=cfg.norm),
+        positions=positions,
+    )
+    x = x + a
+    y = common.mlp(p["mlp"], common.apply_norm(p["ln2"], x, kind=cfg.norm), act=cfg.act)
+    return x + y  # residual contribution added to the trunk by the caller
+
+
+def _shared_decode(p, cfg: LMConfig, h, h0, cache):
+    x = common.linear(p["in_proj"], jnp.concatenate([h, h0], axis=-1))
+    a, cache = attention.decode_step(
+        p["attn"], cfg.attn, common.apply_norm(p["ln1"], x, kind=cfg.norm), cache
+    )
+    x = x + a
+    y = common.mlp(p["mlp"], common.apply_norm(p["ln2"], x, kind=cfg.norm), act=cfg.act)
+    return x + y, cache
+
+
+def _shared_prefill(p, cfg: LMConfig, h, h0, positions, max_len):
+    x = common.linear(p["in_proj"], jnp.concatenate([h, h0], axis=-1))
+    z = common.apply_norm(p["ln1"], x, kind=cfg.norm)
+    a, cache = attention.forward(
+        p["attn"], cfg.attn, z, positions=positions, return_cache=True,
+        max_cache_len=max_len,
+    )
+    x = x + a
+    y = common.mlp(p["mlp"], common.apply_norm(p["ln2"], x, kind=cfg.norm), act=cfg.act)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: LMConfig):
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": common.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype=cfg.dtype)
+    }
+    # stacked per-group params, one stack per pattern position
+    blocks = []
+    for i, kind in enumerate(cfg.pattern):
+        gkeys = jax.random.split(jax.random.fold_in(keys[1], i), cfg.n_groups)
+        blocks.append(jax.vmap(lambda k: _block_init(k, cfg, kind))(gkeys))
+    params["blocks"] = blocks
+    if cfg.shared_attn:
+        params["shared"] = _shared_init(keys[2], cfg)
+    params["final_norm"] = common.norm_init(cfg.d_model, kind=cfg.norm, dtype=cfg.dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.linear_init(
+            keys[3], cfg.d_model, cfg.vocab, bias=False, dtype=cfg.dtype
+        )
+    if cfg.vision is not None:
+        params["vision_proj"] = common.linear_init(
+            keys[4], cfg.vision.d_vision, cfg.d_model, bias=False, dtype=cfg.dtype
+        )
+    return params
+
+
+def _embed_inputs(cfg: LMConfig, params, tokens, images):
+    h = common.embed(params["embed"], tokens)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    if cfg.vision is not None and images is not None:
+        img = common.linear(params["vision_proj"], images.astype(cfg.dtype))
+        h = jnp.concatenate([img, h], axis=1)
+    return h
+
+
+def _logits(cfg: LMConfig, params, h):
+    h = common.apply_norm(params["final_norm"], h, kind=cfg.norm)
+    if cfg.tie_embeddings:
+        return common.unembed(params["embed"], h)
+    return common.linear_f32out(params["lm_head"], h)
+
+
+# ---------------------------------------------------------------------------
+# forward (train)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: LMConfig, params, tokens, images=None):
+    """tokens (b, s) -> (logits (b, s_total, vocab) f32, aux losses dict)."""
+    h = pctx.constrain(_embed_inputs(cfg, params, tokens, images))
+    s_total = h.shape[1]
+    positions = jnp.arange(s_total)
+    h0 = h
+
+    def superblock(carry, group_params):
+        h, aux = carry
+        group_params = pctx.constrain_group_params(group_params)
+        if cfg.shared_attn:
+            h = h + _shared_forward(params["shared"], cfg, h, h0, positions)
+        for i, kind in enumerate(cfg.pattern):
+            h, aux = _block_forward(group_params[i], cfg, kind, h, positions, aux)
+        return (pctx.constrain(h), aux), None
+
+    body = jax.checkpoint(superblock) if cfg.remat else superblock
+    aux0 = {"lb": jnp.zeros((), jnp.float32), "z": jnp.zeros((), jnp.float32)}
+    blocks = tuple(params["blocks"])
+    nest = cfg.scan_nest
+    if nest > 1 and cfg.n_groups % nest == 0:
+        # Two-level scan => nested remat: only the `nest` OUTER boundaries
+        # are saved for the backward; each outer step's inner boundaries are
+        # recomputed on demand. Peak checkpointed activations drop from
+        # O(n_groups) to O(nest + n_groups/nest) residual-stream copies —
+        # what lets the 80-layer 110B train cell fit a 16 GB chip (§Perf).
+        inner = cfg.n_groups // nest
+        blocks2 = jax.tree_util.tree_map(
+            lambda x: x.reshape((nest, inner) + x.shape[1:]), blocks
+        )
+
+        def outer(carry, outer_params):
+            out, _ = jax.lax.scan(body, carry, outer_params)
+            return out, None
+
+        outer_body = jax.checkpoint(outer) if cfg.remat else outer
+        (h, aux), _ = jax.lax.scan(outer_body, (h, aux0), blocks2)
+    else:
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), blocks)
+    return _logits(cfg, params, h), aux
+
+
+def loss_fn(cfg: LMConfig, params, batch):
+    """batch: {tokens (b, s), labels (b, s), [images]} -> scalar loss."""
+    logits, aux = forward(cfg, params, batch["tokens"], batch.get("images"))
+    if cfg.vision is not None and "images" in batch:
+        logits = logits[:, -batch["tokens"].shape[1] :]  # loss on text positions
+    loss = common.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = (
+        loss
+        + cfg.moe_aux_weight * aux["lb"]
+        + cfg.moe_z_weight * aux["z"]
+    )
+    return total, {"ce": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: LMConfig, params, tokens, *, max_cache_len: int, images=None):
+    """Build decode caches from a full prompt. Returns (caches, last_logits)."""
+    h = _embed_inputs(cfg, params, tokens, images)
+    positions = jnp.arange(h.shape[1])
+    h0 = h
+
+    def superblock(h, group_params):
+        group_params = pctx.constrain_group_params(group_params)
+        caches = []
+        shared_cache = None
+        if cfg.shared_attn:
+            y, shared_cache = _shared_prefill(
+                params["shared"], cfg, h, h0, positions, max_cache_len
+            )
+            h = h + y
+        for i, kind in enumerate(cfg.pattern):
+            h, cache = _block_prefill(
+                group_params[i], cfg, kind, h, positions, max_cache_len
+            )
+            caches.append(cache)
+        out = (tuple(caches), shared_cache) if cfg.shared_attn else tuple(caches)
+        return h, out
+
+    h, caches = jax.lax.scan(superblock, h, tuple(params["blocks"]))
+    logits = _logits(cfg, params, h[:, -1:, :])
+    return caches, logits
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int):
+    """Zero caches for decode-from-scratch (or dry-run decode lowering)."""
+
+    def one_group(_):
+        caches = tuple(
+            _block_cache_init(cfg, kind, batch, max_len) for kind in cfg.pattern
+        )
+        if cfg.shared_attn:
+            return (caches, attention.make_cache(cfg.attn, batch, max_len, cfg.dtype))
+        return caches
+
+    stacked = jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+    return stacked
+
+
+def set_cache_position(caches, idx):
+    """Mark caches as holding `idx` valid tokens (dry-run decode@L)."""
+
+    def setter(path, x):
+        return x
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {
+                k: (jnp.full_like(v, idx) if k == "idx" else walk(v))
+                for k, v in tree.items()
+            }
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(t) for t in tree)
+        return tree
+
+    return walk(caches)
+
+
+def decode_step(cfg: LMConfig, params, caches, token):
+    """token (b, 1) -> (new caches, logits (b, 1, vocab))."""
+    h = common.embed(params["embed"], token)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    h0 = h
+
+    def superblock(h, xs):
+        group_params, group_cache = xs
+        group_params = pctx.constrain_group_params(group_params)
+        if cfg.shared_attn:
+            block_caches, shared_cache = group_cache
+            y, shared_cache = _shared_decode(params["shared"], cfg, h, h0, shared_cache)
+            h = h + y
+        else:
+            block_caches = group_cache
+            shared_cache = None
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            h, c = _block_decode(group_params[i], cfg, kind, h, block_caches[i])
+            new_caches.append(c)
+        out = (
+            (tuple(new_caches), shared_cache)
+            if cfg.shared_attn
+            else tuple(new_caches)
+        )
+        return h, out
+
+    h, new_caches = jax.lax.scan(superblock, h, (tuple(params["blocks"]), caches))
+    return new_caches, _logits(cfg, params, h)

@@ -1,0 +1,166 @@
+"""Mamba2 block (state-space duality), functional, with decode step.
+
+Follows the reference Mamba2 architecture (arXiv:2405.21060): a single
+input projection produces [z | x | B | C | dt], a short causal depthwise
+conv over the (x, B, C) channels, softplus dt with a learned bias, negative
+head decays A, SSD sequence mixing (``kernels.ops.ssd_scan`` — Pallas
+chunk kernel on TPU), D skip connection, gated RMSNorm, output projection.
+
+Decode keeps (conv_state, ssm_state) per layer: the conv window and the
+(h, n, p) recurrent state — O(1) per token, which is why the SSM archs own
+the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_inner: int  # usually 2*d_model
+    d_state: int  # N
+    head_dim: int  # P
+    n_groups: int = 1  # B/C groups (G)
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def init(key, cfg: Mamba2Config, dtype):
+    ks = jax.random.split(key, 5)
+    h = cfg.n_heads
+    return {
+        "in_proj": common.linear_init(
+            ks[0], cfg.d_model, cfg.d_in_proj, bias=False, dtype=dtype
+        ),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.d_conv, cfg.conv_channels)) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_channels,), dtype),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(
+                        ks[2], (h,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)
+                    )
+                )
+            )
+        ).astype(jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (h,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((cfg.d_inner,), dtype),
+        "out_proj": common.linear_init(
+            ks[4], cfg.d_inner, cfg.d_model, bias=False, dtype=dtype
+        ),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + cfg.conv_channels]
+    dt = zxbcdt[..., di + cfg.conv_channels :]  # (..., h)
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc, prev=None):
+    """Depthwise causal conv, width d_conv. xbc: (batch, s, ch)."""
+    dconv = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], dconv - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (b, s+dconv-1, ch)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(dconv)
+    )
+    out = jax.nn.silu(out + b)
+    new_state = xp[:, -(dconv - 1) :, :] if dconv > 1 else pad[:, :0]
+    return out, new_state
+
+
+def _gated_rmsnorm(scale, y, z, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def forward(p, cfg: Mamba2Config, x: jnp.ndarray, *, return_state: bool = False):
+    """x: (b, s, d_model) -> (b, s, d_model) [, state dict]."""
+    b, s, _ = x.shape
+    g, n, h, pd = cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = common.linear(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xbc)
+    xs = xbc[..., : cfg.d_inner]
+    Bc = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, s, g, n)
+    Cc = xbc[..., cfg.d_inner + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b, s, h)
+    A = -jnp.exp(p["A_log"])  # (h,)
+    xh = xs.reshape(b, s, h, pd)
+    out = ops.ssd_scan(
+        xh, dt, A, Bc, Cc, chunk=min(cfg.chunk, max(16, s)), return_state=return_state
+    )
+    if return_state:
+        y, ssm_state = out
+    else:
+        y, ssm_state = out, None
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(p["norm_scale"], y, z)
+    y = common.linear(p["out_proj"], y)
+    if return_state:
+        return y, {"conv": conv_state, "ssm": ssm_state}
+    return y
+
+
+def make_state(cfg: Mamba2Config, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_channels), dtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32
+        ),
+    }
+
+
+def decode_step(p, cfg: Mamba2Config, x: jnp.ndarray, state):
+    """x: (b, 1, d_model); state: {conv (b, d_conv-1, ch), ssm (b,h,n,p)}."""
+    b = x.shape[0]
+    g, n, h, pd = cfg.n_groups, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = common.linear(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xbc, prev=state["conv"])
+    xs = xbc[..., : cfg.d_inner]
+    Bc = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, g, n)
+    Cc = xbc[..., cfg.d_inner + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b, h)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, h, pd)
+    ssm_new, y = ops.ssm_decode_step(state["ssm"], xh, dt, A, Bc, Cc)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(p["norm_scale"], y, z)
+    y = common.linear(p["out_proj"], y)
+    return y, {"conv": conv_state, "ssm": ssm_new}

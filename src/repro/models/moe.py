@@ -1,0 +1,105 @@
+"""Top-k mixture-of-experts FFN with GShard-style capacity dispatch.
+
+Routing: softmax router (f32), top-k expert choice per token, per-expert
+capacity C = ceil(tokens/E · k · capacity_factor). Tokens beyond capacity
+are dropped (their combine weight is zero — residual carries them, the
+standard Switch/GShard behaviour).
+
+Dispatch/combine are einsums against a (b, s, E, C) one-hot tensor: under
+pjit with experts sharded on the `model` mesh axis and tokens on `data`,
+XLA SPMD lowers these to the canonical all-to-all pair around the expert
+GEMMs — the same comm pattern as a hand-written MoE layer, with the
+scheduler free to overlap.
+
+Aux outputs: GShard load-balance loss and router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int  # per-expert FFN hidden size
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    gated: bool = True
+
+
+def init(key, cfg: MoEConfig, dtype):
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, cfg.n_experts)
+    experts = jax.vmap(
+        lambda k: common.mlp_init(
+            k, cfg.d_model, cfg.d_expert, gated=cfg.gated, bias=False, dtype=dtype
+        )
+    )(expert_keys)
+    return {
+        "router": common.linear_init(
+            kr, cfg.d_model, cfg.n_experts, bias=False, dtype=jnp.float32
+        ),
+        "experts": experts,  # stacked (E, ...) pytree
+    }
+
+
+def capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    import math
+
+    c = math.ceil(tokens_per_group / cfg.n_experts * cfg.top_k * cfg.capacity_factor)
+    return max(int(c), 4)
+
+
+def forward(p, cfg: MoEConfig, x: jnp.ndarray):
+    """x: (b, s, d) -> (y, aux) with aux = {load_balance_loss, router_z_loss}."""
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, s)
+
+    logits = common.linear(p["router"], x.astype(jnp.float32))  # (b, s, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (b, s, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, k) choice inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (b, s, K, E)
+    # order: k-th choices of earlier tokens first (GShard ordering: iterate k
+    # outer so every token's top-1 gets capacity before any top-2)
+    oh_k_major = jnp.swapaxes(onehot, 1, 2)  # (b, K, s, E)
+    pos_in_expert = (
+        jnp.cumsum(oh_k_major.reshape(b, K * s, E), axis=1) - oh_k_major.reshape(b, K * s, E)
+    ).reshape(b, K, s, E)
+    pos_in_expert = jnp.swapaxes(pos_in_expert, 1, 2)  # (b, s, K, E)
+    within = pos_in_expert < C
+    keep = onehot * within  # (b, s, K, E)
+    pos = jnp.einsum("bske,bske->bsk", pos_in_expert, onehot)  # (b, s, K)
+    pos_oh = jax.nn.one_hot(jnp.minimum(pos, C - 1), C, dtype=jnp.float32)
+
+    # (b, s, E, C) combine weights / dispatch mask
+    combine = jnp.einsum(
+        "bsk,bske,bskc->bsec", gate_vals, keep, pos_oh
+    )
+    dispatch = (combine > 0).astype(x.dtype)
+
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)  # (E, b, C, d)
+    expert_out = jax.vmap(
+        lambda ep, ex: common.mlp(ep, ex, act=cfg.act), in_axes=(0, 0)
+    )(p["experts"], expert_in)
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), expert_out)
+
+    # aux losses (GShard §2.2 / ST-MoE z-loss)
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))  # top-1 assignment share
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y, {"load_balance_loss": lb_loss, "router_z_loss": z_loss}

@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Functional (no optax): state is a pytree {m, v, step}; the update is a pure
+jit-able function. Moments are float32 regardless of param dtype (bf16
+training stability); the optimizer-state sharding rules in
+parallel/sharding.py shard m/v like their parameters (+ ZeRO-1 data-axis
+sharding where enabled).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    end_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to end_lr_frac·peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    end = cfg.peak_lr * cfg.end_lr_frac
+    cos = end + 0.5 * (cfg.peak_lr - end) * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "step": step},
+        {"lr": lr, "grad_norm": gnorm},
+    )

@@ -1,0 +1,75 @@
+"""Thread-local activation-sharding policy.
+
+Model code is arch-agnostic; distribution code sets a policy (e.g. shard the
+hidden state's sequence axis over 'model' for sequence-parallel archs) and
+``constrain`` applies it wherever models call it (embedding output, super-
+block boundaries). Outside a policy (CPU tests, smoke runs) it's a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+_LOCAL = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding: Optional[object]):
+    """`sharding` is a NamedSharding for (b, s, d) hidden states, or None."""
+    prev = getattr(_LOCAL, "sharding", None)
+    _LOCAL.sharding = sharding
+    try:
+        yield
+    finally:
+        _LOCAL.sharding = prev
+
+
+@contextlib.contextmanager
+def param_gather_sharding(slice_shardings):
+    """FSDP: NamedSharding tree (one scan-group slice, TP-only specs). When
+    set, models constrain each group's sliced weights to it at the top of
+    the scan body — forcing XLA to all-gather ONE layer-group's weights per
+    iteration instead of materializing the gathered stack."""
+    prev = getattr(_LOCAL, "param_gather", None)
+    _LOCAL.param_gather = slice_shardings
+    try:
+        yield
+    finally:
+        _LOCAL.param_gather = prev
+
+
+def constrain_group_params(group_params):
+    sh = getattr(_LOCAL, "param_gather", None)
+    if sh is None:
+        return group_params
+    try:
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), group_params, sh
+        )
+    except (ValueError, TypeError):
+        return group_params
+
+
+def constrain(h):
+    sh = getattr(_LOCAL, "sharding", None)
+    if sh is None or h.ndim != 3:
+        return h
+    spec = sh.spec
+    # only constrain when the annotated axes divide the runtime shape
+    mesh_axes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+
+    def axis_len(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            return int(__import__("numpy").prod([mesh_axes[a] for a in entry]))
+        return mesh_axes[entry]
+
+    for dim, entry in enumerate(tuple(spec) + (None,) * (h.ndim - len(spec))):
+        if h.shape[dim] % max(axis_len(entry), 1) != 0:
+            return h
+    return jax.lax.with_sharding_constraint(h, sh)

@@ -1,0 +1,352 @@
+"""PartitionSpec rules: params, optimizer state, batches, decode caches.
+
+TP policy per tensor (model axis = 16 on the production meshes):
+  * attention Q / O projections: shard the head axis when n_heads divides
+    the model axis; otherwise the arch runs SEQUENCE-parallel attention
+    (activations sharded on seq — starcoder2's 24H) or replicated-model
+    (mamba2-130m) — decided by ``tp_mode``.
+  * K/V projections: shard heads when n_kv_heads divides the axis, else
+    REPLICATE (GQA KV is small; Megatron-style). Their optimizer moments
+    are ZeRO-1-sharded over the data axis so replication never costs f32.
+  * dense MLP / MoE experts: canonical column/row (expert) sharding.
+  * embeddings: vocab-sharded when divisible (gemma3's 262k), else
+    replicated (whisper 51865, mamba2 50280, granite-moe 49155).
+  * scanned stacks: the leading group axis is never sharded.
+
+Optimizer state: same spec as the param, plus ZeRO-1 — any axis still
+unsharded and divisible by the data axis takes P("data") (first fit). This
+is what keeps e.g. qwen's replicated KV projections from costing 10.7 GB of
+f32 moments per chip.
+
+Batch/cache specs: batch shards over ("pod","data") when divisible;
+KV caches shard heads when divisible, else the SEQUENCE axis (sequence-
+parallel decode — also the long_500k path, where batch=1 cannot shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchDef, ShapeCell
+from repro.models import lm
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    s = axis_sizes(mesh)
+    return int(np.prod([s[a] for a in dp_axes(mesh)]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return axis_sizes(mesh).get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+# TP mode per arch
+# ---------------------------------------------------------------------------
+
+
+def tp_mode(arch: ArchDef, mesh: Mesh) -> str:
+    """'head' | 'seq' | 'replicate' — how attention/TP shards on this mesh."""
+    m = model_size(mesh)
+    if m == 1:
+        return "replicate"
+    cfg = arch.full
+    if arch.is_encdec():
+        return "head" if cfg.n_heads % m == 0 else "seq"
+    if cfg.attn is not None:
+        return "head" if cfg.attn.n_heads % m == 0 else "seq"
+    # attention-free (mamba2-130m): TP only if inner heads divide the axis
+    if cfg.mamba_cfg is not None and cfg.mamba_cfg.n_heads % m == 0:
+        return "head"
+    return "replicate"
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], arch: ArchDef, mesh: Mesh) -> P:
+    m = model_size(mesh)
+    mode = tp_mode(arch, mesh)
+    cfg = arch.full
+    nd = len(shape)
+
+    def last2(col_spec):
+        """Spec with sharding on the trailing 2 dims, leading dims None."""
+        return P(*([None] * (nd - 2) + list(col_spec)))
+
+    def last1(s):
+        return P(*([None] * (nd - 1) + [s]))
+
+    if m == 1 or mode == "replicate":
+        return P()
+
+    # --- embeddings / heads
+    if re.search(r"(embed/table|pos_embed/table|tok_embed/table)$", path):
+        vocab = shape[0]
+        return P("model", None) if vocab % m == 0 else P()
+    if re.search(r"lm_head/w$", path):
+        return last2([None, "model"]) if shape[-1] % m == 0 else P()
+
+    # --- attention projections
+    if re.search(r"(attn|self|cross)/q/w$", path):
+        if mode == "head" and cfg_heads(arch) % m == 0:
+            return last2([None, "model"])
+        return P()
+    if re.search(r"(attn|self|cross)/[kv]/w$", path):
+        if mode == "head" and cfg_kv_heads(arch) % m == 0:
+            return last2([None, "model"])
+        return P()  # replicate small GQA KV
+    if re.search(r"(attn|self|cross)/q/b$", path):
+        return last1("model") if mode == "head" and cfg_heads(arch) % m == 0 else P()
+    if re.search(r"(attn|self|cross)/[kv]/b$", path):
+        return (
+            last1("model") if mode == "head" and cfg_kv_heads(arch) % m == 0 else P()
+        )
+    if re.search(r"(attn|self|cross)/o/w$", path):
+        if mode == "head" and cfg_heads(arch) % m == 0:
+            return last2(["model", None])
+        return P()
+
+    # --- MoE
+    if re.search(r"moe/router/w$", path):
+        return P()
+    if re.search(r"moe/experts/(up|gate)/w$", path):
+        # (..., E, D, F): shard experts
+        return P(*([None] * (nd - 3) + ["model", None, None]))
+    if re.search(r"moe/experts/down/w$", path):
+        return P(*([None] * (nd - 3) + ["model", None, None]))
+
+    # --- dense MLP
+    if re.search(r"mlp/(up|gate)/w$", path):
+        return last2([None, "model"]) if shape[-1] % m == 0 else P()
+    if re.search(r"mlp/(up|gate)/b$", path):
+        return last1("model") if shape[-1] % m == 0 else P()
+    if re.search(r"mlp/down/w$", path):
+        return last2(["model", None]) if shape[-2] % m == 0 else P()
+
+    # --- Mamba2
+    if cfg_mamba(arch) is not None:
+        mc = cfg_mamba(arch)
+        head_tp = mc.n_heads % m == 0
+        if re.search(r"mamba/in_proj/w$", path):
+            return last2([None, "model"]) if head_tp and shape[-1] % m == 0 else P()
+        if re.search(r"mamba/out_proj/w$", path):
+            return last2(["model", None]) if head_tp else P()
+        if re.search(r"mamba/conv_[wb]$", path):
+            return last1("model") if head_tp and shape[-1] % m == 0 else P()
+        if re.search(r"mamba/(A_log|dt_bias|D|norm_scale)$", path):
+            return P()
+
+    # --- norms, vision proj, everything else small
+    return P()
+
+
+def cfg_heads(arch: ArchDef) -> int:
+    return arch.full.n_heads if arch.is_encdec() else arch.full.attn.n_heads
+
+
+def cfg_kv_heads(arch: ArchDef) -> int:
+    return arch.full.n_kv_heads if arch.is_encdec() else arch.full.attn.n_kv_heads
+
+
+def cfg_mamba(arch: ArchDef):
+    return None if arch.is_encdec() else arch.full.mamba_cfg
+
+
+# FSDP is implemented but DEFAULT OFF: on this XLA version the pjit-hint
+# form costs ~2x compute (SPMD involuntary rematerialization) and 3-5x
+# collectives even with per-group gather constraints — a refuted §Perf
+# hypothesis kept for reference (EXPERIMENTS.md §Perf iteration Q5).
+FSDP_MIN_BYTES = 32 * 2**20  # shard a tensor over 'data' when its TP shard
+#                               still exceeds 32 MiB per device
+
+
+def _fsdp_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh, dtype_bytes=2) -> P:
+    """FSDP: additionally shard large tensors over the 'data' axis (first
+    free divisible dim). XLA SPMD all-gathers the weight per layer inside
+    the scan (the standard ZeRO-3 pattern) and reduce-scatters its grad —
+    this is what brings e.g. qwen's 13.75 GB/device TP-sharded params down
+    to 0.9 GB so the train cell fits a 16 GB chip (§Perf iteration Q4)."""
+    d = axis_sizes(mesh).get("data", 1)
+    if d == 1 or len(shape) < 2:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in str(entries):
+        return spec
+    # bytes of the TP shard on one device
+    n = int(np.prod(shape))
+    m = axis_sizes(mesh).get("model", 1)
+    sharded_by = m if any(e == "model" for e in entries) else 1
+    if n * dtype_bytes // sharded_by < FSDP_MIN_BYTES:
+        return spec
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % d == 0:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def param_specs(params, arch: ArchDef, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching `params` (works on abstract trees)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        sp = _spec_for(_path_str(path), tuple(leaf.shape), arch, mesh)
+        if fsdp:
+            sp = _fsdp_extend(sp, tuple(leaf.shape), mesh)
+        specs.append(sp)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param spec for optimizer moments: shard the first free,
+    divisible axis over 'data' (ZeRO-1)."""
+    d = axis_sizes(mesh).get("data", 1)
+    if d == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in str(entries):
+        return spec
+    # moments smaller than ~1 MiB aren't worth slicing
+    if int(np.prod(shape)) < 262_144:
+        return spec
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % d == 0:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def opt_state_specs(opt_state, pspecs, mesh: Mesh):
+    """Specs for {m, v, step}: param spec + ZeRO-1 data sharding."""
+
+    def moments(tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        flat_specs = jax.tree_util.tree_leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P)
+        )
+        out = [
+            zero1_spec(sp, tuple(leaf.shape), mesh)
+            for (path, leaf), sp in zip(flat, flat_specs)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return {
+        "m": moments(opt_state["m"]),
+        "v": moments(opt_state["v"]),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_tree, cell: ShapeCell, mesh: Mesh):
+    """tokens/labels (B,S) shard batch over dp axes when divisible."""
+    dsize = dp_size(mesh)
+    dp = dp_axes(mesh)
+    b_ax = dp if (cell.batch % max(dsize, 1) == 0 and dsize > 1) else None
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        return P(*([b_ax] + [None] * (nd - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+def cache_specs(caches, arch: ArchDef, cell: ShapeCell, mesh: Mesh):
+    """KV caches: (G, B, hk, S, hd) shard heads if divisible else seq;
+    mamba states (G, B, h, n, p) shard heads if divisible."""
+    m = model_size(mesh)
+    dsize = dp_size(mesh)
+    dp = dp_axes(mesh)
+    b_ax = dp if (cell.batch % max(dsize, 1) == 0 and dsize > 1) else None
+    kvh = None
+    try:
+        kvh = cfg_kv_heads(arch)
+    except Exception:
+        kvh = None
+    mc = cfg_mamba(arch)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if ps.endswith("idx"):
+            return P()
+        if ps.endswith("conv"):  # (G, B, dconv-1, ch)
+            ch_ok = m > 1 and mc is not None and mc.n_heads % m == 0 and shape[-1] % m == 0
+            return P(None, b_ax, None, "model" if ch_ok else None)
+        if ps.endswith("ssm"):  # (G, B, h, n, p)
+            h_ok = m > 1 and shape[-3] % m == 0
+            return P(None, b_ax, "model" if h_ok else None, None, None)
+        # attention kv: (..., B, hk, S, hd); leading G for LM stacks
+        lead = [None] * (nd - 4)
+        if m > 1 and kvh is not None and shape[-3] % m == 0:
+            return P(*(lead + [b_ax, "model", None, None]))
+        if m > 1 and shape[-2] % m == 0:
+            return P(*(lead + [b_ax, None, "model", None]))  # sequence-sharded
+        return P(*(lead + [b_ax, None, None, None]))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+
+
+def activation_spec(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> Optional[P]:
+    """Hidden-state constraint applied at super-block boundaries.
+
+    Only 'seq' archs (heads don't divide the axis) are constrained —
+    attention work balances by sharding the sequence. NOTE a Megatron-style
+    "sequence-shard the boundary for every arch in training" variant was
+    tried and REFUTED: XLA SPMD reshard-thrashes (collectives x8, flops
+    +40%) instead of emitting clean reduce-scatter/all-gather pairs; the
+    remat-memory problem is solved by nested-scan remat + gradient
+    accumulation instead (EXPERIMENTS.md §Perf, iteration Q3).
+    """
+    mode = tp_mode(arch, mesh)
+    if mode != "seq":
+        return None
+    dsize = dp_size(mesh)
+    dp = dp_axes(mesh)
+    b_ax = dp if (cell.batch % max(dsize, 1) == 0 and dsize > 1) else None
+    if cell.seq % model_size(mesh) != 0:
+        return None
+    return P(b_ax, "model", None)

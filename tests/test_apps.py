@@ -1,0 +1,89 @@
+"""PARSEC-in-JAX application correctness + domain properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import APPS, blackscholes, fluidanimate, raytrace, swaptions
+
+
+@pytest.mark.parametrize("name", sorted(APPS))
+def test_apps_run_finite(name):
+    mod = APPS[name]
+    out = mod.run(mod.make_inputs(mod.DEFAULT_N, seed=0))
+    for k, v in out.items():
+        assert bool(jnp.all(jnp.isfinite(v))), (name, k)
+
+
+@pytest.mark.parametrize("name", sorted(APPS))
+def test_apps_deterministic(name):
+    mod = APPS[name]
+    o1 = mod.run(mod.make_inputs(64 if name != "swaptions" else 4, seed=1))
+    o2 = mod.run(mod.make_inputs(64 if name != "swaptions" else 4, seed=1))
+    for k in o1:
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+
+
+@given(
+    s=st.floats(30.0, 100.0),
+    k=st.floats(30.0, 100.0),
+    r=st.floats(0.01, 0.05),
+    v=st.floats(0.15, 0.5),
+    t=st.floats(0.2, 1.5),
+)
+@settings(max_examples=40, deadline=None)
+def test_blackscholes_put_call_parity(s, k, r, v, t):
+    """C - P = S - K e^{-rT} — analytic identity, holds for any inputs."""
+    inp = {
+        "spot": jnp.asarray([s], jnp.float32),
+        "strike": jnp.asarray([k], jnp.float32),
+        "rate": jnp.asarray([r], jnp.float32),
+        "vol": jnp.asarray([v], jnp.float32),
+        "tte": jnp.asarray([t], jnp.float32),
+        "is_call": jnp.asarray([True]),
+    }
+    call = float(blackscholes.run(inp)["price"][0])
+    inp["is_call"] = jnp.asarray([False])
+    put = float(blackscholes.run(inp)["price"][0])
+    parity = s - k * np.exp(-r * t)
+    assert abs((call - put) - parity) < 2e-2  # polynomial CNDF tolerance
+
+
+def test_blackscholes_price_bounds():
+    inp = blackscholes.make_inputs(512, seed=2)
+    price = np.asarray(blackscholes.run(inp)["price"])
+    spot = np.asarray(inp["spot"])
+    strike = np.asarray(inp["strike"])
+    is_call = np.asarray(inp["is_call"])
+    assert (price >= -1e-3).all()
+    bound = np.where(is_call, spot, strike)  # C <= S,  P <= K
+    assert (price <= bound + 1e-3).all()
+
+
+def test_raytrace_image_range_and_content():
+    out = raytrace.run(raytrace.make_inputs(48, seed=0))["image"]
+    img = np.asarray(out)
+    assert img.shape == (48, 48, 3)
+    assert (img >= 0).all() and (img <= 1).all()
+    assert img.std() > 0.01  # actually rendered something
+
+
+def test_swaptions_prices_nonnegative_and_converging():
+    out = swaptions.run(swaptions.make_inputs(8, seed=0))
+    price = np.asarray(out["price"])
+    stderr = np.asarray(out["stderr"])
+    assert (price >= -1e-6).all()
+    assert (stderr >= 0).all()
+    assert (stderr < np.maximum(price, 1e-4) * 5 + 1e-3).all()
+
+
+def test_fluidanimate_stays_in_box_and_conserves_mass():
+    inp = fluidanimate.make_inputs(216, seed=0)
+    out = inp
+    for _ in range(3):
+        out = {**out, **fluidanimate.run({"pos": out["pos"], "vel": out["vel"]})}
+    pos = np.asarray(out["pos"])
+    assert (pos >= 0).all() and (pos <= 1.0).all()
+    dens = np.asarray(out["density"])
+    assert (dens > 0).all()

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs;
+plus decode-path consistency (prefill + decode == teacher-forced forward)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch_id):
+    arch = ARCHS[arch_id]
+    cfg = arch.smoke
+    params = arch.init(KEY, cfg)
+    batch = arch.smoke_batch(seed=1)
+
+    logits = arch.forward(cfg, params, batch)
+    assert logits.shape[-1] == cfg.vocab
+    assert logits.shape[0] == batch["tokens"].shape[0]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: arch.loss_fn(cfg, p, batch), has_aux=True
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = adamw.global_norm(grads)
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+    opt = adamw.init(params)
+    new_params, new_opt, metrics = adamw.update(
+        adamw.AdamWConfig(total_steps=10), params, grads, opt
+    )
+    assert int(new_opt["step"]) == 1
+    # params actually moved
+    delta = adamw.global_norm(
+        jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            new_params,
+            params,
+        )
+    )
+    assert float(delta) > 0
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [
+        "granite-moe-1b-a400m",
+        "granite-20b",
+        "qwen1.5-110b",
+        "starcoder2-3b",
+        "gemma3-12b",
+        "phi-3-vision-4.2b",
+        "zamba2-7b",
+        "whisper-medium",
+        "mamba2-130m",
+        "phi3.5-moe-42b-a6.6b",
+    ],
+)
+def test_decode_consistency(arch_id):
+    """prefill(tokens[:-1]) + decode(tokens[-1]) == forward(tokens)[-1]."""
+    arch = ARCHS[arch_id]
+    cfg = arch.smoke
+    params = arch.init(jax.random.PRNGKey(1), cfg)
+    batch = arch.smoke_batch(seed=3, batch=2, seq=16)
+    logits_full = arch.forward(cfg, params, batch)
+
+    toks = batch["tokens"]
+    pf_batch = {"tokens": toks[:, :-1]}
+    if "images" in batch:
+        pf_batch["images"] = batch["images"]
+    if "frames" in batch:
+        pf_batch = {"frames": batch["frames"], "tokens": toks[:, :-1]}
+    caches, lg_pre = arch.prefill(cfg, params, pf_batch, max_cache_len=32)
+    caches, lg_dec = arch.decode_step(cfg, params, caches, toks[:, -1:])
+
+    err_pre = float(jnp.max(jnp.abs(lg_pre[:, 0] - logits_full[:, -2])))
+    err_dec = float(jnp.max(jnp.abs(lg_dec[:, 0] - logits_full[:, -1])))
+    # MoE: GShard capacity semantics differ between teacher-forced forward
+    # (a token may be dropped when earlier tokens fill its expert's buffer)
+    # and single-token decode (capacity never binds) — decode is the *more*
+    # faithful routing; allow the capacity-drop delta.
+    tol = 8e-2 if arch.family == "moe" else 5e-5
+    assert err_pre < tol, f"prefill mismatch {err_pre}"
+    assert err_dec < tol, f"decode mismatch {err_dec}"
+
+
+def test_moe_balance_loss_decreases_with_uniform_routing():
+    """load-balance loss is minimal (=1) for uniform expert assignment."""
+    from repro.models import moe as moe_mod
+
+    cfg = ARCHS["granite-moe-1b-a400m"].smoke.moe_cfg
+    p = moe_mod.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    y, aux = moe_mod.forward(p, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux["load_balance_loss"]) >= 1.0 - 1e-3
+
+
+def test_vlm_image_tokens_prepended():
+    arch = ARCHS["phi-3-vision-4.2b"]
+    cfg = arch.smoke
+    params = arch.init(KEY, cfg)
+    batch = arch.smoke_batch(seed=0, batch=2, seq=8)
+    logits = arch.forward(cfg, params, batch)
+    assert logits.shape[1] == 8 + cfg.vision.n_patches
+
+
+def test_input_specs_cover_all_supported_cells():
+    from repro.configs.base import SHAPES
+
+    for arch_id, arch in ARCHS.items():
+        for shape in SHAPES:
+            if not arch.supports(shape):
+                assert shape == "long_500k"
+                continue
+            specs = arch.input_specs(shape)
+            assert specs, (arch_id, shape)
+            for v in jax.tree_util.tree_leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_long500k_applicability_matches_design():
+    runs = {a for a, arch in ARCHS.items() if arch.supports("long_500k")}
+    assert runs == {"gemma3-12b", "zamba2-7b", "mamba2-130m"}

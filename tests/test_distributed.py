@@ -1,0 +1,53 @@
+"""Multi-device behaviour (8 virtual devices, subprocess so the forced
+device count never leaks into other tests):
+
+  * compressed_psum == psum, int8 wire format visible in the HLO
+  * error-feedback compressed SGD converges like uncompressed
+  * elastic re-mesh: checkpoint on (2,4) -> restore on (4,2) and (8,1)
+  * sharded train-step lower/compile + hlo_analysis sanity
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers", "distributed_checks.py")
+
+
+@pytest.fixture(scope="module")
+def helper_output():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, HELPER],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env=env,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, f"helper failed:\n{proc.stdout}\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "compressed_psum_parity",
+        "int8_wire_format",
+        "error_feedback_convergence",
+        "elastic_remesh_2x4_to_4x2_to_8x1",
+        "small_dryrun_analysis",
+    ],
+)
+def test_distributed_check(helper_output, name):
+    assert any(
+        line.startswith("PASS " + name) for line in helper_output.splitlines()
+    ), f"check {name} did not pass"
+
+
+def test_all_ok(helper_output):
+    assert "ALL_OK" in helper_output

@@ -1,0 +1,24 @@
+"""Elastic controller: mesh-shape policy + event bookkeeping (single-device;
+the live multi-device re-mesh is covered by tests/test_distributed.py)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import ElasticEvent, mesh_shape_for
+
+
+def test_mesh_shape_policy():
+    assert mesh_shape_for(256) == (16, 16)
+    assert mesh_shape_for(512) == (32, 16)
+    assert mesh_shape_for(64) == (4, 16)
+    assert mesh_shape_for(16) == (1, 16)
+    assert mesh_shape_for(8) == (1, 8)
+    # awkward pools fall back to a smaller model axis that divides
+    assert mesh_shape_for(24) == (3, 8)
+
+
+def test_event_record():
+    e = ElasticEvent(available_chips=128, reason="preemption")
+    assert e.available_chips == 128
+    assert e.time > 0

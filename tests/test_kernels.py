@@ -1,0 +1,213 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes/dtypes, plus gradient checks for the custom VJPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.rbf_gram import rbf_gram_pallas
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# rbf_gram
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d", [(8, 8, 3), (37, 53, 3), (130, 70, 7), (256, 256, 16)])
+@pytest.mark.parametrize("gamma", [0.1, 0.5, 2.0])
+def test_rbf_gram_matches_ref(n, m, d, gamma):
+    x = jnp.asarray(RNG.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    got = rbf_gram_pallas(x, y, gamma=gamma, interpret=True)
+    want = ref.rbf_gram_ref(x, y, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rbf_gram_properties():
+    x = jnp.asarray(RNG.normal(size=(40, 3)), jnp.float32)
+    K = np.asarray(ops.rbf_gram(x, x, 0.5, impl="pallas_interpret"))
+    np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-5)  # K(x,x)=1
+    np.testing.assert_allclose(K, K.T, atol=1e-5)  # symmetry
+    assert (K >= 0).all() and (K <= 1 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,hk,s,d,causal,window",
+    [
+        (2, 4, 4, 64, 32, True, None),
+        (2, 4, 2, 67, 32, True, None),  # GQA + ragged seq
+        (1, 8, 1, 128, 64, True, None),  # MQA
+        (2, 4, 2, 80, 32, True, 16),  # sliding window
+        (2, 4, 4, 48, 32, False, None),  # bidirectional (encoder)
+    ],
+)
+def test_flash_pallas_vs_naive(b, h, hk, s, d, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hk, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hk, s, d)), dtype)
+    got = ops.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=32, block_k=32,
+        impl="pallas_interpret",
+    )
+    want = ref.mha_naive_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+def test_flash_ref_vs_naive_blocks():
+    """Chunked reference across several block sizes (incl. non-dividing)."""
+    q = jnp.asarray(RNG.normal(size=(2, 4, 70, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 70, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 70, 16)), jnp.float32)
+    want = ref.mha_naive_ref(q, k, v, causal=True)
+    for bq, bk in [(16, 16), (32, 16), (70, 70), (128, 128)]:
+        got = ref.flash_attention_ref(q, k, v, causal=True, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 12), (False, None)])
+def test_flash_backward_matches_autodiff(causal, window):
+    q = jnp.asarray(RNG.normal(size=(2, 6, 50, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 50, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 50, 16)), jnp.float32)
+
+    def f(q, k, v):
+        return (
+            ops.flash_attention(
+                q, k, v, causal=causal, window=window, block_q=16, block_k=16,
+                impl="ref",
+            )
+            ** 2
+        ).sum()
+
+    def fn(q, k, v):
+        return (ref.mha_naive_ref(q, k, v, causal=causal, window=window) ** 2).sum()
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(fn, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_flash_decode_with_cache_semantics():
+    """decode: q at position L attends to cache[:L+1] incl. window."""
+    b, h, s, d = 2, 4, 40, 16
+    q = jnp.asarray(RNG.normal(size=(b, h, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    L = 25
+    got = ops.flash_attention(
+        q, k, v, causal=False, window=8, q_offset=jnp.asarray(L),
+        kv_len=jnp.asarray(L + 1),
+    )
+    want = ref.mha_naive_ref(
+        q, k[:, :, : L + 1], v[:, :, : L + 1], causal=False, window=8, q_offset=L
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(x, dt, A, B, C):
+    b_, s_, h_, p_ = x.shape
+    g_, n_ = B.shape[2], B.shape[3]
+    rep = h_ // g_
+    Bh = np.repeat(np.asarray(B), rep, 2)
+    Ch = np.repeat(np.asarray(C), rep, 2)
+    hst = np.zeros((b_, h_, n_, p_))
+    ys = np.zeros((b_, s_, h_, p_))
+    for t in range(s_):
+        dec = np.exp(np.asarray(dt)[:, t] * np.asarray(A)[None])
+        hst = (
+            hst * dec[..., None, None]
+            + np.asarray(dt)[:, t, :, None, None]
+            * Bh[:, t, :, :, None]
+            * np.asarray(x)[:, t, :, None, :]
+        )
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", Ch[:, t], hst)
+    return ys
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (100, 32), (32, 32)])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_pallas_vs_naive(s, chunk, g):
+    b, h, p, n = 2, 4, 8, 16
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, size=(h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, impl="pallas_interpret")
+    want = _naive_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4)
+    got_ref = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got_ref), want, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_scan():
+    b, s, h, p, g, n = 2, 30, 4, 8, 2, 16
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, size=(h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    y_scan = ref.ssd_scan_ref(x, dt, A, B, C, chunk=8)
+    hstate = jnp.zeros((b, h, n, p))
+    outs = []
+    for t in range(s):
+        hstate, yt = ops.ssm_decode_step(hstate, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        outs.append(yt)
+    y_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan), atol=5e-5)
+
+
+def test_ssd_grad_through_custom_vjp():
+    b, s, h, p, g, n = 1, 40, 2, 4, 1, 8
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, size=(h,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    g1 = jax.grad(lambda x: ops.ssd_scan(x, dt, A, B, C, chunk=8, impl="pallas_interpret").sum())(x)
+    g2 = jax.grad(lambda x: ref.ssd_scan_ref(x, dt, A, B, C, chunk=8).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [100, 256, 1000, 65536])
+def test_int8_roundtrip(n):
+    x = jnp.asarray(RNG.normal(size=(n,)) * 3.0, jnp.float32)
+    q, s = ops.int8_quantize(x, impl="pallas_interpret")
+    xd = ops.int8_dequantize(q, s, n=n, impl="pallas_interpret")
+    qr, sr = ref.int8_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q)[: qr.shape[0]], np.asarray(qr))
+    # error bounded by scale/2 per block
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    per_block_bound = np.repeat(np.asarray(sr), 256)[:n] * 0.5 + 1e-7
+    assert (err <= per_block_bound).all()
+
+
+def test_int8_zero_block():
+    x = jnp.zeros((512,), jnp.float32)
+    q, s = ops.int8_quantize(x, impl="ref")
+    xd = ops.int8_dequantize(q, s, n=512, impl="ref")
+    assert np.allclose(np.asarray(xd), 0.0)

@@ -1,0 +1,102 @@
+"""Sharding-rule properties: every spec must be VALID for every arch on the
+production meshes — sharded dims divisible by their mesh axes, opt-state
+ZeRO extensions consistent, batch/cache specs well-formed. Validated
+structurally from abstract shapes (no devices needed)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Just enough Mesh surface for the rule functions."""
+
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_names = names
+
+
+POD = FakeMesh((16, 16), ("data", "model"))
+MULTIPOD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def axis_len(mesh, entry):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([sizes[a] for a in entry]))
+    return sizes[entry]
+
+
+def check_spec_tree(tree, specs, mesh, what):
+    flat_l = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_l) == len(flat_s), what
+    for (path, leaf), spec in zip(flat_l, flat_s):
+        entries = tuple(spec)
+        assert len(entries) <= len(leaf.shape), (what, path, spec, leaf.shape)
+        for dim, entry in enumerate(entries):
+            n = axis_len(mesh, entry)
+            assert leaf.shape[dim] % n == 0, (
+                f"{what}: {jax.tree_util.keystr(path)} dim{dim} "
+                f"{leaf.shape[dim]} not divisible by {entry}({n})"
+            )
+
+
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_param_and_opt_specs_valid(arch_id, mesh):
+    arch = ARCHS[arch_id]
+    params = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0), arch.full))
+    specs = shd.param_specs(params, arch, mesh)
+    check_spec_tree(params, specs, mesh, f"{arch_id} params")
+    opt = jax.eval_shape(adamw.init, params)
+    ospecs = shd.opt_state_specs(opt, specs, mesh)
+    check_spec_tree(opt["m"], ospecs["m"], mesh, f"{arch_id} opt.m")
+    check_spec_tree(opt["v"], ospecs["v"], mesh, f"{arch_id} opt.v")
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_batch_and_cache_specs_valid(arch_id):
+    arch = ARCHS[arch_id]
+    for shape_name, cell in SHAPES.items():
+        if not arch.supports(shape_name):
+            continue
+        specs_in = arch.input_specs(shape_name)
+        bspecs = shd.batch_specs(specs_in, cell, POD)
+        check_spec_tree(specs_in, bspecs, POD, f"{arch_id}/{shape_name} batch")
+        if cell.kind == "decode":
+            if arch.is_encdec():
+                caches = jax.eval_shape(
+                    lambda: arch.init_caches(arch.full, cell.batch, cell.seq, cell.seq)
+                )
+            else:
+                caches = jax.eval_shape(
+                    lambda: arch.init_caches(arch.full, cell.batch, cell.seq)
+                )
+            cspecs = shd.cache_specs(caches, arch, cell, POD)
+            check_spec_tree(caches, cspecs, POD, f"{arch_id}/{shape_name} caches")
+
+
+def test_tp_mode_assignments():
+    assert shd.tp_mode(ARCHS["qwen1.5-110b"], POD) == "head"
+    assert shd.tp_mode(ARCHS["starcoder2-3b"], POD) == "seq"  # 24H % 16 != 0
+    assert shd.tp_mode(ARCHS["mamba2-130m"], POD) == "replicate"
+    assert shd.tp_mode(ARCHS["whisper-medium"], POD) == "head"
+
+
+def test_zero1_shards_large_replicated_moments():
+    params = {"big": jax.ShapeDtypeStruct((80, 8192, 1024), np.float32)}
+    specs = {"big": P()}
+    out = shd.zero1_spec(specs["big"], (80, 8192, 1024), POD)
+    assert "data" in str(tuple(out))
+    # small tensors stay replicated
+    small = shd.zero1_spec(P(), (16, 64), POD)
+    assert tuple(small) == ()
