@@ -1,17 +1,18 @@
 """Beyond-paper: energy-optimal (chips, frequency) plans for LM workloads.
 
-The paper's pipeline applied to the TPU fleet: fit the fleet power model
-from telemetry, characterize each workload's step-time surface via SVR on
-the dry-run roofline sampler, minimize E = P×T. Reports the plan and the
-saving vs the race-to-idle max-slice baseline, plus the static-vs-dynamic
-parcel analysis (paper §4.1) for v5e constants.
+The paper's pipeline applied to the TPU fleet, now through the canonical
+``core.engine.PlanningEngine``: fit the fleet power model from telemetry,
+characterize each workload family's step-time surface once (memoized SVR on
+the dry-run roofline sampler), evaluate every grid in one batched pass, and
+minimize E = P×T. Reports each plan, the saving vs the race-to-idle
+max-slice baseline, and the one-shot ``plan_many`` wall time.
 """
 
 from __future__ import annotations
 
 from benchmarks.common import emit, save_json, timed
 from repro.configs.base import SHAPES
-from repro.core.planner import EnergyOptimalPlanner
+from repro.core.engine import PlanningEngine, Workload
 from repro.core.tpu_power import FleetTelemetry, fit_fleet_power
 
 WORKLOADS = [
@@ -33,20 +34,22 @@ def run():
         f"c=({pm.c1:.1f};{pm.c2:.1f};{pm.c3:.0f};{pm.c4:.0f})"
         f"_race_to_idle_512chips={pm.race_to_idle_expected(1.1, 512, 2)}",
     )
-    planner = EnergyOptimalPlanner(pm, noise=0.01, seed=0)
+    engine = PlanningEngine(pm, noise=0.01, seed=0)
+    requests = [Workload(arch_id, SHAPES[shape]) for arch_id, shape in WORKLOADS]
+    plans, us = timed(engine.plan_many, requests)
     out = {}
-    for arch_id, shape in WORKLOADS:
-        plan, us = timed(planner.plan_for_workload, arch_id, SHAPES[shape])
+    for (arch_id, shape), plan in zip(WORKLOADS, plans):
         save = 100 * (plan.baseline_energy_j - plan.energy_per_step_j) / max(
             plan.baseline_energy_j, 1e-12
         )
         emit(
             f"tpu_plan_{arch_id}_{shape}",
-            us,
+            us / len(plans),
             f"{plan.chips}chips@{plan.frequency_ghz:.2f}GHz_"
             f"{plan.step_time_s*1e3:.1f}ms_{plan.power_w/1e3:.1f}kW_"
             f"save={save:.1f}%_src={plan.terms_source}",
         )
         out[f"{arch_id}/{shape}"] = plan.__dict__
+    emit("tpu_plan_many_total", us, f"n={len(plans)}_batched=1")
     save_json("tpu_planner", out)
     return out

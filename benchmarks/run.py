@@ -17,7 +17,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--only",
-        choices=["paper", "roofline", "planner", "kernels"],
+        choices=["paper", "roofline", "planner", "engine", "kernels"],
         default=None,
     )
     args = ap.parse_args()
@@ -51,6 +51,10 @@ def main() -> None:
         from benchmarks import bench_tpu_planner
 
         bench_tpu_planner.run()
+    if args.only in (None, "engine"):
+        from benchmarks import bench_engine
+
+        bench_engine.run()
 
 
 if __name__ == "__main__":

@@ -1,8 +1,11 @@
 """Full paper reproduction study: all 4 PARSEC apps x 5 inputs vs Ondemand.
 
     PYTHONPATH=src python examples/parsec_energy_study.py [--quick]
+        [--objective {energy,edp,ed2p}]
 
 Prints the Tables 2-5 analogue rows and the Fig. 10 normalized energies.
+The argmin runs through the unified ``core.engine`` semantics, so the study
+can also chase the energy-delay sweet spots (``--objective edp|ed2p``).
 (Also runs the actual JAX implementations of each app once, so the numbers
 sit next to living code, not just the node model.)
 """
@@ -16,12 +19,19 @@ import numpy as np
 
 from repro.apps import APPS
 from repro.core import characterize, energy, governor, power
+from repro.core import engine as engine_mod
 from repro.core.node_sim import FREQ_GRID, INPUT_SIZES, Node
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--objective",
+        choices=sorted(engine_mod.OBJECTIVES),
+        default="energy",
+        help="grid-argmin metric E*T^k: energy (paper Eq. 8), edp, ed2p",
+    )
     args = ap.parse_args()
 
     node = Node(seed=42)
@@ -43,7 +53,12 @@ def main():
         print(f"{'N':>3} {'proposed':>16} {'E kJ':>8} {'od best':>14} {'od worst':>14} {'save%':>12}")
         for n in INPUT_SIZES:
             cfg = energy.minimize_energy(
-                pm, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=n
+                pm,
+                perf,
+                frequencies=FREQ_GRID,
+                cores=range(1, 33),
+                input_size=n,
+                objective=args.objective,
             )
             run = node.run_fixed(app, cfg.frequency_ghz, cfg.cores, n)
             od = {}

@@ -4,8 +4,10 @@
 
 1. stress the (simulated) 2x16-core node, fit the CMOS power model (Eq. 7),
 2. characterize blackscholes over (frequency x cores x input), fit the SVR,
-3. minimize E = P x T (Eq. 8) -> energy-optimal configuration,
-4. verify by "running" it, vs the Linux Ondemand governor.
+3. minimize E = P x T (Eq. 8) -> energy-optimal configuration
+   (routed through core.engine.solve_grid, the unified planning path),
+4. verify by "running" it, vs the Linux Ondemand governor,
+5. walk the energy/time Pareto frontier for deadline negotiation.
 """
 
 import sys
@@ -15,6 +17,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core import characterize, energy, governor, power
+from repro.core import engine as engine_mod
 from repro.core.node_sim import FREQ_GRID, Node
 
 APP, INPUT_SIZE = "blackscholes", 3.0
@@ -73,6 +76,18 @@ def main():
         f"governor best case, {100*(worst-actual.energy_j)/actual.energy_j:+.1f}% "
         f"vs worst case   (paper: avg +6% / +790%)"
     )
+
+    print("\n== 5. energy/time Pareto frontier (deadline negotiation) ==")
+    F, P, T, W, E = energy.energy_grid(
+        pm, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=INPUT_SIZE
+    )
+    frontier = engine_mod.pareto_frontier(T, E)
+    print(f"{len(frontier)} non-dominated configurations (fastest -> cheapest):")
+    for idx in frontier[:: max(1, len(frontier) // 6)]:
+        print(
+            f"  {T[idx]:7.1f} s  {E[idx]/1e3:7.2f} kJ   "
+            f"@ {F[idx]:.1f} GHz x {int(P[idx]):2d} cores"
+        )
 
 
 if __name__ == "__main__":

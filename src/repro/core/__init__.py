@@ -1,3 +1,6 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the energy-optimal configuration
+# system — lives here. ``engine`` is the canonical planning path
+# (PlanningEngine: memoized characterization, batched grid eval,
+# multi-objective argmin); ``energy`` and ``planner`` are thin
+# compatibility wrappers over it. ``power``/``svr``/``characterize``/
+# ``governor``/``node_sim``/``tpu_power`` are the fitted-model substrates.

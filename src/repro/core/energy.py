@@ -1,11 +1,14 @@
-"""Energy model and optimizer (paper §2.3, Eq. 8).
+"""Energy model and optimizer (paper §2.3, Eq. 8) — node-level entry point.
 
     E(f, p, s, N) = P(f, p, s) × SVR(f, p, N)
 
-The minimizer evaluates every configuration on the discrete (f, p) grid —
-the same exhaustive search the paper uses — optionally under execution-time,
-frequency and core-count constraints (mentioned but not exercised in the
-paper; exercised here). Batched over the grid in one jitted evaluation.
+This module is the paper-faithful node API; the masked grid argmin itself
+lives in ``core.engine`` (``solve_grid``), the canonical planning path
+shared with the TPU ``PlanningEngine``. ``minimize_energy`` is a thin
+wrapper over that single semantics: one step-time floor
+(``engine.TIME_FLOOR``), one ``Constraints`` class, configurable
+``on_infeasible`` (default ``"raise"``, the seed behaviour here) and
+selectable objective (``energy`` | ``edp`` | ``ed2p``).
 """
 
 from __future__ import annotations
@@ -17,6 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import svr as svr_mod
+from repro.core.engine import (  # noqa: F401  (Constraints re-exported)
+    TIME_FLOOR,
+    Constraints,
+    solve_grid,
+)
 from repro.core.power import PowerModel
 
 
@@ -30,14 +38,6 @@ class Configuration:
     predicted_time_s: float
     predicted_power_w: float
     predicted_energy_j: float
-
-
-@dataclasses.dataclass(frozen=True)
-class Constraints:
-    max_time_s: Optional[float] = None
-    max_cores: Optional[int] = None
-    min_frequency_ghz: Optional[float] = None
-    max_frequency_ghz: Optional[float] = None
 
 
 def sockets_for_cores(cores: np.ndarray, cores_per_socket: int) -> np.ndarray:
@@ -60,7 +60,7 @@ def energy_grid(
     N = np.full_like(F, float(input_size))
     feats = np.stack([F.ravel(), P.ravel(), N.ravel()], axis=1)
     T = np.asarray(svr_mod.predict(perf_model, feats)).reshape(F.shape)
-    T = np.maximum(T, 1e-6)  # SVR extrapolation may dip non-physical
+    T = np.maximum(T, TIME_FLOOR)  # SVR extrapolation may dip non-physical
     W = np.asarray(power_model(jnp.asarray(F), jnp.asarray(P), jnp.asarray(S)))
     E = W * T
     return F, P, T, W, E
@@ -75,8 +75,10 @@ def minimize_energy(
     input_size: float,
     cores_per_socket: int = 16,
     constraints: Optional[Constraints] = None,
+    objective: str = "energy",
+    on_infeasible: str = "raise",
 ) -> Configuration:
-    """Paper Eq. (8): argmin_{f,p} P(f,p,s(p)) × SVR(f,p,N)."""
+    """Paper Eq. (8): argmin_{f,p} P(f,p,s(p)) × SVR(f,p,N)·T^k."""
     F, P, T, W, E = energy_grid(
         power_model,
         perf_model,
@@ -85,20 +87,15 @@ def minimize_energy(
         input_size=input_size,
         cores_per_socket=cores_per_socket,
     )
-    mask = np.ones_like(E, dtype=bool)
-    if constraints is not None:
-        if constraints.max_time_s is not None:
-            mask &= T <= constraints.max_time_s
-        if constraints.max_cores is not None:
-            mask &= P <= constraints.max_cores
-        if constraints.min_frequency_ghz is not None:
-            mask &= F >= constraints.min_frequency_ghz
-        if constraints.max_frequency_ghz is not None:
-            mask &= F <= constraints.max_frequency_ghz
-    if not mask.any():
-        raise ValueError("constraints admit no configuration on the grid")
-    E_masked = np.where(mask, E, np.inf)
-    idx = np.unravel_index(np.argmin(E_masked), E.shape)
+    idx = solve_grid(
+        F,
+        P,
+        T,
+        W,
+        objective=objective,
+        constraints=constraints,
+        on_infeasible=on_infeasible,
+    )
     S = sockets_for_cores(np.array(P[idx]), cores_per_socket)
     return Configuration(
         frequency_ghz=float(F[idx]),

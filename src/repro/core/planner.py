@@ -1,161 +1,42 @@
-"""EnergyOptimalPlanner: the paper's methodology, one level up the stack.
+"""EnergyOptimalPlanner: compatibility shim over ``core.engine``.
 
-Given an (arch × shape) workload, find the energy-optimal **launch
-configuration** (number of chips / mesh slice, per-chip clock) — exactly the
-paper's (cores, frequency) search with the TPU fleet as the "node":
+The canonical planning path is ``engine.PlanningEngine`` — memoized SVR
+characterization, batched grid prediction, multi-objective argmin, one
+constraint semantics. This module keeps the seed's TPU-planner surface
+(``EnergyOptimalPlanner.plan_for_workload`` and the roofline helpers) as
+thin delegations so existing callers (launch/train, runtime/elastic,
+benchmarks) keep working unchanged.
 
-  1. POWER (application-agnostic): Eq. (7) with (chips, pods) in place of
-     (cores, sockets), FIT from fleet telemetry (core/tpu_power.py).
-  2. PERFORMANCE (architecture-aware): step times sampled over the
-     (frequency × chips) grid and characterized with the same ε-SVR
-     (standardize + log-target — the beyond-paper flags, since step times
-     span orders of magnitude across mesh sizes). The sampler derives step
-     time from the compiled dry-run's roofline terms:
-        t(f, c) = max( compute·(256/c)·(f_nom/f),
-                       memory·(256/c),
-                       collective·dcn(c) )  + measurement noise
-     (compute scales with clock and chips; HBM does not scale with clock;
-     collectives are per-device-constant for bandwidth-optimal rings, with
-     a DCN penalty above one pod).
-  3. ENERGY: minimize P(f,c,pods)·T(f,c)·steps over the grid (Eq. 8),
-     under optional deadline constraints.
-
-When the dry-run artifact for the cell is missing the sampler falls back to
-an analytic 6·N·D estimate from the arch config (so --auto-energy works
-before the sweep has run).
+Semantics preserved from the seed: silent fastest-fallback when a deadline
+is infeasible (``on_infeasible="fastest"``). Unified with the node path:
+the step-time floor is now ``engine.TIME_FLOOR`` (1e-6, previously 1e-9
+here) and constraints use the shared ``engine.Constraints``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
 from typing import Optional, Sequence
 
-import numpy as np
-
-from repro.configs import ARCHS
-from repro.configs.base import ShapeCell
-from repro.core import svr as svr_mod
+from repro.core.engine import (  # noqa: F401  (re-exports for seed callers)
+    CHIP_GRID,
+    DRYRUN_DIR,
+    Constraints,
+    EnergyPlan,
+    ParetoPoint,
+    PlanningEngine,
+    RooflineTerms,
+    Workload,
+    _mesh_for_chips,
+    terms_analytic,
+    terms_from_dryrun,
+)
 from repro.core.power import PowerModel
-from repro.core.tpu_power import (
-    DCN_POD_PENALTY,
-    F_GRID,
-    F_NOM,
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS_BF16,
-    FleetTelemetry,
-    fit_fleet_power,
-)
-
-DRYRUN_DIR = os.path.join(
-    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
-)
-CHIP_GRID = (16, 32, 64, 128, 256, 512)
-
-
-@dataclasses.dataclass
-class RooflineTerms:
-    """Per-device seconds at 256 chips / f_nom (from the dry-run)."""
-
-    compute_s: float
-    memory_s: float
-    collective_s: float
-    source: str  # "dryrun" | "analytic"
-
-    def step_time(self, f_ghz: float, chips: int) -> float:
-        scale = 256.0 / chips
-        comp = self.compute_s * scale * (F_NOM / f_ghz)
-        mem = self.memory_s * scale
-        coll = self.collective_s * (
-            DCN_POD_PENALTY if chips > 256 else 1.0
-        )
-        return max(comp, mem, coll)
-
-
-def terms_from_dryrun(arch_id: str, shape: str, dryrun_dir: str = DRYRUN_DIR):
-    path = os.path.join(dryrun_dir, f"{arch_id}__{shape}__pod.json")
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        rec = json.load(f)
-    if not rec.get("ok"):
-        return None
-    h = rec["hlo"]
-    return RooflineTerms(
-        compute_s=h["flops_per_device"] / PEAK_FLOPS_BF16,
-        memory_s=h["memory_bytes_per_device"] / HBM_BW,
-        collective_s=h["collective_bytes_per_device"] / ICI_BW,
-        source="dryrun",
-    )
-
-
-def terms_analytic(arch_id: str, cell: ShapeCell):
-    """6·N·D fallback when no dry-run artifact exists."""
-    from repro.models import common
-
-    arch = ARCHS.get(arch_id)
-    if arch is None:
-        n_params = 1e8
-    else:
-        import jax
-
-        abs_params = jax.eval_shape(
-            lambda: arch.init(__import__("jax").random.PRNGKey(0), arch.full)
-        )
-        n_params = sum(
-            int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(abs_params)
-        )
-    tokens = cell.seq * cell.batch
-    mult = 3.0 if cell.kind == "train" else 0.33  # fwd+bwd(+remat) vs fwd
-    flops = 2.0 * n_params * tokens * mult
-    per_dev = flops / 256
-    return RooflineTerms(
-        compute_s=per_dev / PEAK_FLOPS_BF16,
-        memory_s=2 * n_params * 2 / 256 / HBM_BW,
-        collective_s=per_dev / PEAK_FLOPS_BF16 * 0.3,
-        source="analytic",
-    )
-
-
-@dataclasses.dataclass
-class EnergyPlan:
-    arch: str
-    shape: str
-    chips: int
-    pods: int
-    mesh: tuple
-    frequency_ghz: float
-    step_time_s: float
-    power_w: float
-    energy_per_step_j: float
-    baseline_energy_j: float  # race-to-idle full-slice baseline
-    terms_source: str
-    svr_pae: float
-
-    def summary(self) -> str:
-        save = 100 * (self.baseline_energy_j - self.energy_per_step_j) / max(
-            self.baseline_energy_j, 1e-12
-        )
-        return (
-            f"{self.arch}/{self.shape}: {self.chips} chips ({self.pods} pod(s), "
-            f"mesh {self.mesh}) @ {self.frequency_ghz:.2f} GHz -> "
-            f"{self.step_time_s*1e3:.1f} ms/step, {self.power_w/1e3:.1f} kW, "
-            f"{self.energy_per_step_j:.1f} J/step "
-            f"({save:+.1f}% vs max-slice race-to-idle; perf model: "
-            f"{self.terms_source}, SVR PAE {self.svr_pae:.2%})"
-        )
-
-
-def _mesh_for_chips(chips: int) -> tuple:
-    if chips > 256:
-        return (chips // 256, 16, 16)
-    data = chips // 16 if chips >= 16 else 1
-    return (max(data, 1), min(chips, 16))
+from repro.core.tpu_power import F_GRID, FleetTelemetry, fit_fleet_power
 
 
 class EnergyOptimalPlanner:
+    """Thin wrapper: the seed's one-workload-at-a-time API over the engine."""
+
     def __init__(
         self,
         power_model: PowerModel,
@@ -166,84 +47,60 @@ class EnergyOptimalPlanner:
         chip_grid: Sequence[int] = CHIP_GRID,
         freq_grid: Sequence[float] = tuple(F_GRID),
     ):
-        self.power = power_model
-        self.dryrun_dir = dryrun_dir
-        self.noise = noise
-        self.rng = np.random.default_rng(seed)
-        self.chip_grid = tuple(chip_grid)
-        self.freq_grid = tuple(freq_grid)
+        self.engine = PlanningEngine(
+            power_model,
+            freq_grid=freq_grid,
+            chip_grid=chip_grid,
+            dryrun_dir=dryrun_dir,
+            noise=noise,
+            seed=seed,
+            on_infeasible="fastest",
+        )
 
     @classmethod
     def default(cls) -> "EnergyOptimalPlanner":
         return cls(fit_fleet_power(FleetTelemetry()))
 
-    # -- characterization --------------------------------------------------
+    # seed attribute surface, delegated
+    @property
+    def power(self) -> PowerModel:
+        return self.engine.power
+
+    @property
+    def freq_grid(self):
+        return self.engine.freq_grid
+
+    @property
+    def chip_grid(self):
+        return self.engine.chip_grid
+
+    @property
+    def dryrun_dir(self) -> str:
+        return self.engine.dryrun_dir
+
+    @property
+    def noise(self) -> float:
+        return self.engine.noise
 
     def characterize(self, terms: RooflineTerms):
-        feats, times = [], []
-        for f in self.freq_grid:
-            for c in self.chip_grid:
-                t = terms.step_time(float(f), int(c))
-                t *= 1.0 + float(self.rng.normal(0, self.noise))
-                feats.append((float(f), float(c)))
-                times.append(max(t, 1e-9))
-        x = np.asarray(feats, np.float32)
-        y = np.asarray(times, np.float32)
-        model = svr_mod.fit(
-            x, y, gamma=0.5, standardize=True, log_target=True, eps=1e-4
-        )
-        pae = svr_mod.pae(model, x, y)
-        return model, pae
-
-    # -- planning ------------------------------------------------------------
+        return self.engine.characterize(terms)
 
     def plan_for_workload(
         self,
         arch_id: str,
-        cell: ShapeCell,
+        cell,
         *,
         n_steps: int = 1,
         max_step_time_s: Optional[float] = None,
     ) -> EnergyPlan:
-        terms = terms_from_dryrun(arch_id, cell.name, self.dryrun_dir)
-        if terms is None:
-            terms = terms_analytic(arch_id, cell)
-        perf, pae = self.characterize(terms)
-
-        F, C = np.meshgrid(self.freq_grid, self.chip_grid, indexing="ij")
-        feats = np.stack([F.ravel(), C.ravel()], 1).astype(np.float32)
-        T = np.asarray(svr_mod.predict(perf, feats)).reshape(F.shape)
-        T = np.maximum(T, 1e-9)
-        pods = np.ceil(C / 256)
-        import jax.numpy as jnp
-
-        W = np.asarray(self.power(jnp.asarray(F), jnp.asarray(C), jnp.asarray(pods)))
-        E = W * T * n_steps
-        mask = np.ones_like(E, bool)
-        if max_step_time_s is not None:
-            mask &= T <= max_step_time_s
-        if not mask.any():
-            mask = T <= np.min(T) * 1.001  # fall back to fastest
-        idx = np.unravel_index(np.argmin(np.where(mask, E, np.inf)), E.shape)
-
-        # baseline: race-to-idle on the full slice (max chips, max f)
-        fmax = float(self.freq_grid[-1])
-        cmax = int(self.chip_grid[-1])
-        t_base = terms.step_time(fmax, cmax)
-        w_base = float(self.power(fmax, cmax, int(np.ceil(cmax / 256))))
-
-        chips = int(C[idx])
-        return EnergyPlan(
-            arch=arch_id,
-            shape=cell.name,
-            chips=chips,
-            pods=int(pods[idx]),
-            mesh=_mesh_for_chips(chips),
-            frequency_ghz=float(F[idx]),
-            step_time_s=float(T[idx]),
-            power_w=float(W[idx]),
-            energy_per_step_j=float(E[idx] / n_steps),
-            baseline_energy_j=t_base * w_base,
-            terms_source=terms.source,
-            svr_pae=pae,
+        constraints = (
+            Constraints(max_time_s=max_step_time_s)
+            if max_step_time_s is not None
+            else None
         )
+        return self.engine.plan(
+            Workload(arch_id, cell, n_steps=n_steps, constraints=constraints)
+        )
+
+    def plan_many(self, workloads: Sequence[Workload]):
+        return self.engine.plan_many(workloads)

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -321,6 +321,53 @@ def predict(params: SVRParams, x: np.ndarray, *, impl: Optional[str] = None):
     ys = K @ params.beta + params.bias
     out = ys * params.y_std + params.y_mean
     return jnp.exp(out) if params.log_target else out
+
+
+def predict_many(
+    models: Sequence[SVRParams], x: np.ndarray, *, impl: Optional[str] = None
+):
+    """Batched prediction: many fitted models over one shared query grid.
+
+    The planning engine's hot path: all grid points of all pending workloads
+    go through ONE ``rbf_gram`` call (batched leading dim) plus one batched
+    matvec, instead of one Gram build per plan. Requires homogeneous models
+    (same train-set shape / γ / target space) — the engine's per-family fits
+    always are; heterogeneous inputs fall back to per-model ``predict``.
+    Returns a list of per-model prediction arrays, aligned with ``models``.
+    """
+    models = list(models)
+    if not models:
+        return []
+    m0 = models[0]
+    homogeneous = all(
+        m.x_train.shape == m0.x_train.shape
+        and m.gamma == m0.gamma
+        and m.log_target == m0.log_target
+        for m in models[1:]
+    )
+    if not homogeneous:
+        return [predict(m, x, impl=impl) for m in models]
+    xq = jnp.asarray(x, jnp.float32)
+    Xs = jnp.stack([(xq - m.x_mean) / m.x_std for m in models])  # (B, m, d)
+    Yt = jnp.stack([m.x_train for m in models])  # (B, n, d)
+    K = ops.rbf_gram(Xs, Yt, m0.gamma, impl=impl)  # (B, m, n) — one call
+    out = _predict_from_gram(
+        K,
+        jnp.stack([m.beta for m in models]),
+        jnp.asarray([m.bias for m in models], jnp.float32),
+        jnp.asarray([m.y_mean for m in models], jnp.float32),
+        jnp.asarray([m.y_std for m in models], jnp.float32),
+        m0.log_target,
+    )
+    return list(out)
+
+
+def _predict_from_gram(K, beta, bias, y_mean, y_std, log_target: bool):
+    # deliberately eager: the matvec is tiny and batch sizes vary call to
+    # call — a jit here would recompile per batch size
+    ys = jnp.einsum("bmn,bn->bm", K, beta) + bias[:, None]
+    out = ys * y_std[:, None] + y_mean[:, None]
+    return jnp.exp(out) if log_target else out
 
 
 def mae(params: SVRParams, x, y) -> float:

@@ -44,8 +44,25 @@ def resolve_impl(impl: Optional[str]) -> str:
 
 
 def rbf_gram(x, y, gamma: float, *, impl: Optional[str] = None, block: int = 128):
-    """K[i,j] = exp(-gamma ||x_i - y_j||^2); x (n,d), y (m,d) -> (n,m) f32."""
+    """K[i,j] = exp(-gamma ||x_i - y_j||^2); x (n,d), y (m,d) -> (n,m) f32.
+
+    Also accepts a batch dim — x (b,n,d), y (b,m,d) -> (b,n,m) — so callers
+    (``svr.predict_many``) can evaluate many Gram blocks in one call.
+    """
     mode = resolve_impl(impl)
+    if jnp.ndim(x) == 3:
+        if mode == "ref":
+            return jax.vmap(lambda a, b: ref.rbf_gram_ref(a, b, gamma))(x, y)
+        return jax.vmap(
+            lambda a, b: rbf_gram_pallas(
+                a,
+                b,
+                gamma=gamma,
+                block_n=block,
+                block_m=block,
+                interpret=(mode == "pallas_interpret"),
+            )
+        )(x, y)
     if mode == "ref":
         return ref.rbf_gram_ref(x, y, gamma)
     return rbf_gram_pallas(

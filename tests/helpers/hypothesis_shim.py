@@ -1,0 +1,107 @@
+"""Minimal stand-in for the OPTIONAL ``hypothesis`` dev dependency.
+
+Tier-1 must not require packages the container lacks. When ``hypothesis``
+is not installed, ``tests/conftest.py`` registers this shim under the
+``hypothesis`` module name so the property-style tests still run — as
+seeded random sweeps (strategy bounds first, then uniform draws) — instead
+of the whole suite dying at collection with ModuleNotFoundError.
+
+Installing the real package (``pip install hypothesis``) transparently
+replaces the shim and restores shrinking / example databases / coverage.
+Only the API surface the test-suite uses is provided: ``given``,
+``settings`` and the ``floats`` / ``integers`` / ``booleans`` strategies.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+_SETTINGS_ATTR = "_shim_max_examples"
+
+
+class _Strategy:
+    """Draws one example; the first draws are the strategy's bounds."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def example_at(self, i, rng):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+def floats(min_value, max_value, **_):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        (float(min_value), float(max_value)),
+    )
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        (int(min_value), int(max_value)),
+    )
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), (False, True))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # settings() may sit above or below given() in the decorator
+            # stack — look on both the wrapper and the wrapped function.
+            n = getattr(
+                wrapper,
+                _SETTINGS_ATTR,
+                getattr(fn, _SETTINGS_ATTR, DEFAULT_MAX_EXAMPLES),
+            )
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                drawn = {k: s.example_at(i, rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # like real hypothesis: strategy-supplied params leave the signature,
+        # so pytest only resolves the remaining ones (fixtures)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+        )
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats = floats
+    st.integers = integers
+    st.booleans = booleans
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -13,6 +13,7 @@ from repro.optim import adamw
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", sorted(ARCHS))
 def test_smoke_forward_and_train_step(arch_id):
     arch = ARCHS[arch_id]
@@ -48,6 +49,7 @@ def test_smoke_forward_and_train_step(arch_id):
     assert float(delta) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "arch_id",
     [

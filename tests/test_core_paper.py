@@ -1,16 +1,16 @@
 """The paper's core methodology: power fit, SVR, energy minimizer, governors,
-node simulator — validated against the paper's own quantitative claims."""
+node simulator — validated against the paper's own quantitative claims.
+
+Fitted models (power fit, blackscholes characterization + SVR) come from
+session-scoped fixtures in ``conftest.py`` so they are built once per run.
+"""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import characterize, energy, governor, power, svr
-from repro.core.node_sim import FREQ_GRID, PROFILES, Node
-
-NODE = Node(seed=7)
-STRESS = NODE.stress_grid()
-PM = power.fit_power_model(*STRESS)
+from repro.core.node_sim import FREQ_GRID, Node
 
 
 # ---------------------------------------------------------------------------
@@ -18,23 +18,23 @@ PM = power.fit_power_model(*STRESS)
 # ---------------------------------------------------------------------------
 
 
-def test_power_fit_recovers_paper_coefficients():
-    c1, c2, c3, c4 = PM.coeffs()
+def test_power_fit_recovers_paper_coefficients(power_model):
+    c1, c2, c3, c4 = power_model.coeffs()
     assert abs(c1 - 0.29) < 0.05
     assert abs(c2 - 0.97) < 0.25
     assert abs(c3 - 198.59) < 3.0
     assert abs(c4 - 9.18) < 3.0
 
 
-def test_power_fit_error_in_paper_band():
-    rep = power.fit_report(PM, *STRESS)
+def test_power_fit_error_in_paper_band(power_model, stress_samples):
+    rep = power.fit_report(power_model, *stress_samples)
     assert rep["ape"] < 0.015  # paper: 0.75%
     assert rep["rmse_watts"] < 4.0  # paper: 2.38 W
 
 
-def test_race_to_idle_expected_on_this_node():
+def test_race_to_idle_expected_on_this_node(power_model):
     # paper §4.1: dynamic parcel < static parcel even at (f,p,s) max
-    assert PM.race_to_idle_expected(2.2, 32, 2)
+    assert power_model.race_to_idle_expected(2.2, 32, 2)
 
 
 @given(
@@ -43,12 +43,12 @@ def test_race_to_idle_expected_on_this_node():
     s=st.integers(1, 2),
 )
 @settings(max_examples=50, deadline=None)
-def test_power_model_properties(f, p, s):
-    w = float(PM(f, p, s))
+def test_power_model_properties(power_model, f, p, s):
+    w = float(power_model(f, p, s))
     assert w > 0
     # monotone in each argument
-    assert float(PM(f + 0.05, p, s)) >= w - 1e-6
-    assert float(PM(f, min(p + 1, 32), s)) >= w - 1e-6
+    assert float(power_model(f + 0.05, p, s)) >= w - 1e-6
+    assert float(power_model(f, min(p + 1, 32), s)) >= w - 1e-6
 
 
 # ---------------------------------------------------------------------------
@@ -56,25 +56,12 @@ def test_power_model_properties(f, p, s):
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture(scope="module")
-def blackscholes_ch():
-    sampler = characterize.NodeSampler(Node(seed=3), "blackscholes")
-    # reduced grid for test runtime; benchmarks run the full §3.4 sweep
-    return characterize.characterize(
-        sampler,
-        "blackscholes",
-        freqs=FREQ_GRID[::2],
-        cores=range(1, 33, 2),
-        input_sizes=(1.0, 3.0, 5.0),
-    )
-
-
-def test_svr_train_pae_in_paper_band(blackscholes_ch):
-    m = blackscholes_ch.fit_svr()
-    pae = svr.pae(m, blackscholes_ch.features, blackscholes_ch.times)
+def test_svr_train_pae_in_paper_band(blackscholes_ch, bs_perf):
+    pae = svr.pae(bs_perf, blackscholes_ch.features, blackscholes_ch.times)
     assert pae < 0.05  # paper Table 1: 0.87% - 4.6%
 
 
+@pytest.mark.slow
 def test_svr_cv(blackscholes_ch):
     mae, pae = svr.kfold_cv(
         blackscholes_ch.features, blackscholes_ch.times, k=5
@@ -83,6 +70,7 @@ def test_svr_cv(blackscholes_ch):
     assert mae < 0.1 * float(np.mean(blackscholes_ch.times))
 
 
+@pytest.mark.slow
 def test_svr_log_target_mode(blackscholes_ch):
     m = blackscholes_ch.fit_svr(log_target=True, standardize=True, gamma=2.0)
     pae = svr.pae(m, blackscholes_ch.features, blackscholes_ch.times)
@@ -94,25 +82,20 @@ def test_svr_log_target_mode(blackscholes_ch):
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture(scope="module")
-def bs_perf(blackscholes_ch):
-    return blackscholes_ch.fit_svr()
-
-
-def test_minimizer_beats_every_grid_point(bs_perf):
+def test_minimizer_beats_every_grid_point(power_model, bs_perf):
     cfg = energy.minimize_energy(
-        PM, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
     )
     F, P, T, W, E = energy.energy_grid(
-        PM, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
     )
     assert cfg.predicted_energy_j <= E.min() + 1e-6
 
 
-def test_constraints_honored(bs_perf):
+def test_constraints_honored(power_model, bs_perf):
     c = energy.Constraints(max_cores=8, max_frequency_ghz=1.8)
     cfg = energy.minimize_energy(
-        PM,
+        power_model,
         bs_perf,
         frequencies=FREQ_GRID,
         cores=range(1, 33),
@@ -122,17 +105,17 @@ def test_constraints_honored(bs_perf):
     assert cfg.cores <= 8 and cfg.frequency_ghz <= 1.8
 
 
-def test_time_constraint(bs_perf):
+def test_time_constraint(power_model, bs_perf):
     free = energy.minimize_energy(
-        PM, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
     )
     # deadline at the grid's fastest achievable time (+5%) is always feasible
     _, _, T, _, _ = energy.energy_grid(
-        PM, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
     )
     deadline = float(T.min()) * 1.05
     tight = energy.minimize_energy(
-        PM,
+        power_model,
         bs_perf,
         frequencies=FREQ_GRID,
         cores=range(1, 33),
@@ -144,7 +127,7 @@ def test_time_constraint(bs_perf):
     # an infeasible deadline raises
     with pytest.raises(ValueError):
         energy.minimize_energy(
-            PM,
+            power_model,
             bs_perf,
             frequencies=FREQ_GRID,
             cores=range(1, 33),
@@ -187,7 +170,8 @@ def test_conservative_steps_gradually():
     assert f2 < 2.3  # hasn't jumped straight to max
 
 
-def test_proposed_beats_ondemand_worst_case():
+@pytest.mark.slow
+def test_proposed_beats_ondemand_worst_case(power_model):
     """Paper §4.2: proposed config always beats the governor's worst core
     count (by 59%-1298% there); single-digit % vs its best case."""
     node = Node(seed=11)
@@ -201,7 +185,7 @@ def test_proposed_beats_ondemand_worst_case():
     )
     perf = ch.fit_svr()
     cfg = energy.minimize_energy(
-        PM, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+        power_model, perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
     )
     actual = node.run_fixed(app, cfg.frequency_ghz, cfg.cores, 3)
     od = {

@@ -13,6 +13,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # one subprocess, 8 virtual devices, minutes
+
 HELPER = os.path.join(os.path.dirname(__file__), "helpers", "distributed_checks.py")
 
 

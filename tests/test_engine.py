@@ -1,0 +1,344 @@
+"""PlanningEngine: seed-parity, unified constraint semantics, objectives,
+batched prediction, pareto frontier.
+
+Parity contract (the refactor's acceptance bar): with ``objective="energy"``
+the engine reproduces the seed ``minimize_energy`` / ``plan_for_workload``
+argmin configuration bit-for-bit on the paper grid, and ``plan_many`` over N
+workloads matches N sequential plans.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.core import energy, svr as svr_mod
+from repro.core.engine import (
+    OBJECTIVES,
+    TIME_FLOOR,
+    Constraints,
+    PlanningEngine,
+    RooflineTerms,
+    Workload,
+    pareto_frontier,
+    solve_grid,
+)
+from repro.core.node_sim import FREQ_GRID
+
+TERMS_A = RooflineTerms(
+    compute_s=0.02, memory_s=0.008, collective_s=0.004, source="synthetic"
+)
+TERMS_B = RooflineTerms(
+    compute_s=0.001, memory_s=0.05, collective_s=0.002, source="synthetic"
+)
+TERMS_C = RooflineTerms(
+    compute_s=0.05, memory_s=0.01, collective_s=0.02, source="synthetic"
+)
+
+
+def _seed_sequential_plan(engine, terms, max_step_time_s=None):
+    """The seed ``EnergyOptimalPlanner.plan_for_workload`` algorithm,
+    replicated verbatim: fresh SVR fit, per-plan grid predict, silent
+    fastest-fallback, seed-era 1e-9 floor."""
+    rng = np.random.default_rng(engine.seed)
+    feats, times = [], []
+    for f in engine.freq_grid:
+        for c in engine.chip_grid:
+            t = terms.step_time(float(f), int(c))
+            t *= 1.0 + float(rng.normal(0, engine.noise))
+            feats.append((float(f), float(c)))
+            times.append(max(t, 1e-9))
+    model = svr_mod.fit(
+        np.asarray(feats, np.float32),
+        np.asarray(times, np.float32),
+        gamma=0.5,
+        standardize=True,
+        log_target=True,
+        eps=1e-4,
+    )
+    F, C = np.meshgrid(engine.freq_grid, engine.chip_grid, indexing="ij")
+    grid = np.stack([F.ravel(), C.ravel()], 1).astype(np.float32)
+    T = np.maximum(np.asarray(svr_mod.predict(model, grid)).reshape(F.shape), 1e-9)
+    pods = np.ceil(C / 256)
+    W = np.asarray(engine.power(jnp.asarray(F), jnp.asarray(C), jnp.asarray(pods)))
+    E = W * T
+    mask = np.ones_like(E, bool)
+    if max_step_time_s is not None:
+        mask &= T <= max_step_time_s
+    if not mask.any():
+        mask = T <= np.min(T) * 1.001
+    idx = np.unravel_index(np.argmin(np.where(mask, E, np.inf)), E.shape)
+    return float(F[idx]), int(C[idx]), float(T[idx])
+
+
+# ---------------------------------------------------------------------------
+# parity with the seed paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("terms", [TERMS_A, TERMS_B], ids=["compute", "memory"])
+def test_engine_matches_seed_planner_argmin(engine, terms):
+    plan = engine.plan(Workload("synthetic", SHAPES["train_4k"], terms=terms))
+    f, c, t = _seed_sequential_plan(engine, terms)
+    assert (plan.frequency_ghz, plan.chips) == (f, c)
+    assert plan.step_time_s == pytest.approx(t, rel=1e-4)
+
+
+def test_engine_matches_seed_planner_under_deadline(engine):
+    free = engine.plan(Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A))
+    deadline = free.step_time_s * 0.8
+    plan = engine.plan(
+        Workload(
+            "synthetic",
+            SHAPES["train_4k"],
+            terms=TERMS_A,
+            constraints=Constraints(max_time_s=deadline),
+        )
+    )
+    f, c, _ = _seed_sequential_plan(engine, TERMS_A, max_step_time_s=deadline)
+    assert (plan.frequency_ghz, plan.chips) == (f, c)
+    assert plan.step_time_s <= deadline + 1e-9
+
+
+def test_minimize_energy_matches_seed_argmin(power_model, bs_perf):
+    """The wrapper's engine-routed argmin == the seed's inline masked argmin."""
+    cfg = energy.minimize_energy(
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+    )
+    F, P, T, W, E = energy.energy_grid(
+        power_model, bs_perf, frequencies=FREQ_GRID, cores=range(1, 33), input_size=3
+    )
+    idx = np.unravel_index(np.argmin(E), E.shape)
+    assert (cfg.frequency_ghz, cfg.cores) == (float(F[idx]), int(P[idx]))
+    assert cfg.predicted_energy_j == pytest.approx(float(E[idx]))
+
+
+def test_plan_many_matches_sequential(fleet_pm):
+    workloads = [
+        Workload("a", SHAPES["train_4k"], terms=TERMS_A),
+        Workload("b", SHAPES["prefill_32k"], terms=TERMS_B),
+        Workload("c", SHAPES["train_4k"], terms=TERMS_C),
+        Workload("a", SHAPES["train_4k"], terms=TERMS_A, objective="edp"),
+        Workload(
+            "b",
+            SHAPES["prefill_32k"],
+            terms=TERMS_B,
+            constraints=Constraints(max_frequency_ghz=0.9),
+        ),
+        Workload("c", SHAPES["train_4k"], terms=TERMS_C, n_steps=100),
+    ]
+    batch_eng = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    batch = batch_eng.plan_many(workloads)
+    seq_eng = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    seq = [seq_eng.plan(w) for w in workloads]
+    for b, s in zip(batch, seq):
+        assert (b.frequency_ghz, b.chips) == (s.frequency_ghz, s.chips)
+        # f32 gram fusion differs slightly between batch sizes
+        assert b.step_time_s == pytest.approx(s.step_time_s, rel=1e-4)
+        assert b.energy_per_step_j == pytest.approx(s.energy_per_step_j, rel=1e-4)
+
+
+def test_characterization_cache_hits(engine):
+    w = Workload("cache-test", SHAPES["train_4k"], terms=TERMS_C)
+    engine.plan(w)
+    fit = engine._fits[w.key]
+    engine.plan_many([w, w, dataclass_replace(w, objective="ed2p")])
+    assert engine._fits[w.key] is fit  # same fit object, no re-fit
+
+
+def dataclass_replace(w, **kw):
+    import dataclasses
+
+    return dataclasses.replace(w, **kw)
+
+
+# ---------------------------------------------------------------------------
+# unified constraint semantics (the empty-mask regression)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_mask_raise_vs_fastest():
+    F, P = np.meshgrid([1.0, 2.0], [1, 2], indexing="ij")
+    T = np.array([[1.0, 2.0], [3.0, 4.0]])
+    W = np.ones_like(T)
+    impossible = Constraints(max_time_s=0.5)
+    with pytest.raises(ValueError, match="no configuration"):
+        solve_grid(F, P, T, W, constraints=impossible, on_infeasible="raise")
+    idx = solve_grid(F, P, T, W, constraints=impossible, on_infeasible="fastest")
+    assert T[idx] == 1.0  # fell back to the fastest grid point
+    with pytest.raises(ValueError, match="on_infeasible"):
+        solve_grid(F, P, T, W, constraints=impossible, on_infeasible="bogus")
+    with pytest.raises(ValueError, match="objective"):
+        solve_grid(F, P, T, W, objective="speed")
+
+
+def test_time_floor_is_unified():
+    # sub-floor step times are clamped before the metric is formed: a bogus
+    # 1e-12 "time" must not make its configuration win on E = W·T
+    F, P = np.meshgrid([1.0], [1, 2], indexing="ij")
+    T = np.array([[1e-12, 2e-6]])
+    W = np.array([[1e9, 1.0]])
+    idx = solve_grid(F, P, T, W)
+    assert int(P[idx]) == 2  # floored 1e-6 × 1e9 ≫ 2e-6 × 1
+    assert TIME_FLOOR == 1e-6
+
+
+def test_engine_infeasible_deadline_falls_back_to_fastest(engine):
+    free = engine.plan(Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A))
+    plan = engine.plan(
+        Workload(
+            "synthetic",
+            SHAPES["train_4k"],
+            terms=TERMS_A,
+            constraints=Constraints(max_time_s=free.step_time_s * 1e-6),
+        )
+    )
+    # silent fastest-fallback (planner semantics): fastest point on the grid
+    fit = engine._fits[Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A).key]
+    assert plan.step_time_s == pytest.approx(float(fit.T.min()), rel=1e-3)
+
+
+def test_engine_raise_semantics(fleet_pm):
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0, on_infeasible="raise")
+    with pytest.raises(ValueError, match="no configuration"):
+        eng.plan(
+            Workload(
+                "synthetic",
+                SHAPES["train_4k"],
+                terms=TERMS_A,
+                constraints=Constraints(max_time_s=1e-9),
+            )
+        )
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+
+def test_objective_exponents():
+    assert OBJECTIVES == {"energy": 0.0, "edp": 1.0, "ed2p": 2.0}
+
+
+def test_objectives_pick_different_corners():
+    # point 0: slow & frugal (wins on energy); point 1: fast & hungry
+    # (wins on EDP/ED²P once delay is weighted in)
+    F, P = np.meshgrid([1.0], [1, 2], indexing="ij")
+    T = np.array([[2.0, 0.5]])
+    W = np.array([[0.4, 1.8]])  # E = [0.8, 0.9]; EDP = [1.6, 0.45]
+    assert int(P[solve_grid(F, P, T, W, objective="energy")]) == 1
+    assert int(P[solve_grid(F, P, T, W, objective="edp")]) == 2
+    assert int(P[solve_grid(F, P, T, W, objective="ed2p")]) == 2
+
+
+def test_engine_edp_never_slower_than_energy(engine):
+    e_plan = engine.plan(Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A))
+    d_plan = engine.plan(
+        Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A, objective="edp")
+    )
+    assert d_plan.step_time_s <= e_plan.step_time_s + 1e-9
+    assert d_plan.objective == "edp" and e_plan.objective == "energy"
+
+
+# ---------------------------------------------------------------------------
+# batched SVR prediction
+# ---------------------------------------------------------------------------
+
+
+def _toy_models(n_models=3, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    models = []
+    for i in range(n_models):
+        x = rng.uniform(0.5, 2.0, size=(n, 2)).astype(np.float32)
+        y = (np.sin(x[:, 0] * (i + 1)) + x[:, 1]).astype(np.float32)
+        models.append(svr_mod.fit(x, y, gamma=0.5, standardize=True))
+    return models
+
+
+def test_predict_many_matches_predict():
+    models = _toy_models()
+    xq = np.random.default_rng(1).uniform(0.5, 2.0, size=(17, 2)).astype(np.float32)
+    batched = svr_mod.predict_many(models, xq)
+    for m, b in zip(models, batched):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(svr_mod.predict(m, xq)), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_predict_many_heterogeneous_fallback():
+    rng = np.random.default_rng(2)
+    a = svr_mod.fit(
+        rng.uniform(0.5, 2, (16, 2)).astype(np.float32),
+        rng.uniform(1, 2, 16).astype(np.float32),
+        gamma=0.5,
+    )
+    b = svr_mod.fit(
+        rng.uniform(0.5, 2, (20, 2)).astype(np.float32),
+        rng.uniform(1, 2, 20).astype(np.float32),
+        gamma=0.5,
+    )
+    xq = rng.uniform(0.5, 2, (5, 2)).astype(np.float32)
+    batched = svr_mod.predict_many([a, b], xq)
+    np.testing.assert_allclose(
+        np.asarray(batched[0]), np.asarray(svr_mod.predict(a, xq)), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(batched[1]), np.asarray(svr_mod.predict(b, xq)), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# pareto frontier
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_frontier_is_nondominated():
+    T = np.array([[1.0, 2.0, 3.0], [1.5, 0.9, 4.0]])
+    E = np.array([[5.0, 3.0, 2.5], [6.0, 4.5, 1.0]])
+    idxs = pareto_frontier(T, E)
+    ts = [T[i] for i in idxs]
+    es = [E[i] for i in idxs]
+    assert ts == sorted(ts)  # fastest first
+    assert es == sorted(es, reverse=True)  # strictly cheaper as we slow down
+    # no grid point strictly dominates a frontier point
+    for i in idxs:
+        dominates = ((T <= T[i]) & (E < E[i])) | ((T < T[i]) & (E <= E[i]))
+        assert not dominates.any()
+
+
+def test_engine_pareto_honors_constraints(engine):
+    w = Workload(
+        "synthetic",
+        SHAPES["train_4k"],
+        terms=TERMS_A,
+        constraints=Constraints(max_cores=64, max_frequency_ghz=0.9),
+    )
+    frontier = engine.pareto(w)
+    assert frontier, "constrained frontier should not be empty"
+    assert all(p.chips <= 64 and p.frequency_ghz <= 0.9 for p in frontier)
+    # the constrained plan is the constrained frontier's cheapest point
+    plan = engine.plan(w)
+    assert plan.energy_per_step_j == pytest.approx(
+        frontier[-1].energy_per_step_j, rel=1e-6
+    )
+
+
+def test_plan_reports_total_energy(engine):
+    plan = engine.plan(
+        Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A, n_steps=250)
+    )
+    assert plan.n_steps == 250
+    assert plan.total_energy_j == pytest.approx(plan.energy_per_step_j * 250)
+
+
+def test_engine_pareto(engine):
+    w = Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A)
+    frontier = engine.pareto(w)
+    assert len(frontier) >= 2
+    times = [p.step_time_s for p in frontier]
+    energies = [p.energy_per_step_j for p in frontier]
+    assert times == sorted(times)
+    assert energies == sorted(energies, reverse=True)
+    # the energy-optimal plan is the frontier's cheapest point
+    plan = engine.plan(w)
+    assert plan.energy_per_step_j == pytest.approx(energies[-1], rel=1e-6)

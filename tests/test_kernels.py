@@ -27,6 +27,16 @@ def test_rbf_gram_matches_ref(n, m, d, gamma):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+def test_rbf_gram_batched_matches_ref():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(3, 16, 2)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(3, 20, 2)), jnp.float32)
+    got = ops.rbf_gram(x, y, 0.5, impl="pallas_interpret")
+    want = ops.rbf_gram(x, y, 0.5, impl="ref")
+    assert got.shape == (3, 16, 20)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_rbf_gram_properties():
     x = jnp.asarray(RNG.normal(size=(40, 3)), jnp.float32)
     K = np.asarray(ops.rbf_gram(x, x, 0.5, impl="pallas_interpret"))
@@ -66,6 +76,7 @@ def test_flash_pallas_vs_naive(b, h, hk, s, d, causal, window, dtype):
     )
 
 
+@pytest.mark.slow
 def test_flash_ref_vs_naive_blocks():
     """Chunked reference across several block sizes (incl. non-dividing)."""
     q = jnp.asarray(RNG.normal(size=(2, 4, 70, 16)), jnp.float32)
@@ -77,6 +88,7 @@ def test_flash_ref_vs_naive_blocks():
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("causal,window", [(True, None), (True, 12), (False, None)])
 def test_flash_backward_matches_autodiff(causal, window):
     q = jnp.asarray(RNG.normal(size=(2, 6, 50, 16)), jnp.float32)
@@ -143,6 +155,7 @@ def _naive_ssd(x, dt, A, B, C):
     return ys
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("s,chunk", [(64, 16), (100, 32), (32, 32)])
 @pytest.mark.parametrize("g", [1, 2])
 def test_ssd_pallas_vs_naive(s, chunk, g):
@@ -176,6 +189,7 @@ def test_ssd_decode_step_matches_scan():
     np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_scan), atol=5e-5)
 
 
+@pytest.mark.slow
 def test_ssd_grad_through_custom_vjp():
     b, s, h, p, g, n = 1, 40, 2, 4, 1, 8
     x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)

@@ -28,6 +28,7 @@ def qwen_small():
     return arch, cfg, params, batch
 
 
+@pytest.mark.slow
 def test_nested_scan_matches_flat(qwen_small):
     arch, cfg_flat, params, batch = qwen_small
     cfg_nest = dataclasses.replace(cfg_flat, scan_nest=2)
@@ -42,6 +43,7 @@ def test_nested_scan_matches_flat(qwen_small):
         )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("accum", [2, 4])
 def test_grad_accumulation_matches_single_step(qwen_small, accum):
     arch, cfg, params, batch = qwen_small
@@ -57,6 +59,7 @@ def test_grad_accumulation_matches_single_step(qwen_small, accum):
         )
 
 
+@pytest.mark.slow
 def test_ring_cache_decode_past_window():
     """gemma3 smoke (window=8): decode 24 >> 8 tokens; ring cache must match
     the teacher-forced forward exactly at every step."""

@@ -1,17 +1,17 @@
-"""TPU EnergyOptimalPlanner (the paper's technique as a framework feature)."""
+"""TPU EnergyOptimalPlanner (the paper's technique as a framework feature).
 
+The planner is now a compatibility shim over ``core.engine.PlanningEngine``;
+these tests pin the shim's seed-era surface. ``fleet_pm`` / ``planner`` are
+session fixtures in ``conftest.py``.
+"""
+
+import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import SHAPES, ShapeCell
-from repro.core import planner as planner_mod
+from repro.configs.base import SHAPES
+from repro.core import svr as svr_mod
 from repro.core.planner import EnergyOptimalPlanner, RooflineTerms
-from repro.core.tpu_power import TRUE_COEFFS, FleetTelemetry, fit_fleet_power
-
-
-@pytest.fixture(scope="module")
-def fleet_pm():
-    return fit_fleet_power(FleetTelemetry(seed=1))
+from repro.core.tpu_power import TRUE_COEFFS
 
 
 def test_fleet_power_fit_recovers_constants(fleet_pm):
@@ -19,11 +19,6 @@ def test_fleet_power_fit_recovers_constants(fleet_pm):
     assert abs(c1 - TRUE_COEFFS[0]) / TRUE_COEFFS[0] < 0.15
     assert abs(c3 - TRUE_COEFFS[2]) < 150
     assert abs(c4 - TRUE_COEFFS[3]) / TRUE_COEFFS[3] < 0.15
-
-
-@pytest.fixture(scope="module")
-def planner(fleet_pm):
-    return EnergyOptimalPlanner(fleet_pm, noise=0.01, seed=0)
 
 
 def test_plan_from_dryrun_artifacts(planner):
@@ -54,15 +49,9 @@ def test_compute_bound_workload_prefers_low_freq_or_few_chips(planner):
         compute_s=0.001, memory_s=0.1, collective_s=0.001, source="synthetic"
     )
     perf, _ = planner.characterize(terms)
-    import numpy as np
-
-    from repro.core import svr as svr_mod
-
     F, C = np.meshgrid(planner.freq_grid, planner.chip_grid, indexing="ij")
     feats = np.stack([F.ravel(), C.ravel()], 1).astype(np.float32)
     T = np.asarray(svr_mod.predict(perf, feats)).reshape(F.shape)
-    import jax.numpy as jnp
-
     pods = np.ceil(C / 256)
     W = np.asarray(planner.power(jnp.asarray(F), jnp.asarray(C), jnp.asarray(pods)))
     E = W * T

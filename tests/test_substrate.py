@@ -144,12 +144,14 @@ def trained(tmp_path_factory):
     return d, res
 
 
+@pytest.mark.slow
 def test_loss_decreases(trained):
     _, res = trained
     losses = [h["loss"] for h in res["history"]]
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
 
 
+@pytest.mark.slow
 def test_restart_resumes_bitwise(trained):
     d, res = trained
     # fresh trainer restores step-30 state and continues; compare against an
@@ -182,6 +184,7 @@ def test_restart_resumes_bitwise(trained):
     np.testing.assert_allclose(l2, l3, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_preemption_flag_stops_and_checkpoints(tmp_path):
     params = ARCH.init(jax.random.PRNGKey(0), TINY)
     tr = Trainer(
