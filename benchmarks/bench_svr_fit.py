@@ -1,0 +1,118 @@
+"""Batched SVR fitting: ``svr.fit_many`` vs sequential ``fit`` on 8
+workload families, plus the governor closed loop.
+
+Acceptance (ISSUE 2): fit_many >= 3x over one-at-a-time fits on 8 engine
+training sets with config-choice parity — the plans picked from batched
+fits must equal the plans picked from sequential fits, (f, chips) exact.
+The emitted ``experiments/bench/svr_fit.json`` also carries the
+``core.evaluate`` governor comparison (quick grid) so the paper's
+worst-case governor ratio rides in the bench artifact.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.core import evaluate, svr
+from repro.core.engine import (
+    ENGINE_FIT_KW,
+    PlanningEngine,
+    RooflineTerms,
+    Workload,
+)
+from repro.core.node_sim import FREQ_GRID, MAX_CORES, Node
+from repro.core.tpu_power import FleetTelemetry, fit_fleet_power
+
+# 8 workload families spanning compute-, memory- and collective-bound mixes
+FAMILY_TERMS = [
+    RooflineTerms(
+        compute_s=0.002 * (i + 1),
+        memory_s=0.0008 * (8 - i),
+        collective_s=0.0004 * (1 + i % 3),
+        source="synthetic",
+    )
+    for i in range(8)
+]
+
+FIT_KW = ENGINE_FIT_KW  # bench fits exactly what the engine fits
+
+
+def run():
+    pm = fit_fleet_power(FleetTelemetry(seed=0))
+    engine = PlanningEngine(pm, noise=0.01, seed=0)
+    sets = [engine._training_set(t) for t in FAMILY_TERMS]
+
+    # warm the jit caches (batched gram compiles per (B, n) shape)
+    svr.fit_many(sets, **FIT_KW)
+    [svr.fit(x, y, **FIT_KW) for x, y in sets]
+
+    def med(fn, reps=5):
+        times = []
+        for _ in range(reps):
+            _, us = timed(fn)
+            times.append(us)
+        return float(np.median(times))
+
+    seq_us = med(lambda: [svr.fit(x, y, **FIT_KW) for x, y in sets])
+    batch_us = med(lambda: svr.fit_many(sets, **FIT_KW))
+    speedup = seq_us / batch_us
+
+    # config-choice parity: plans from one-at-a-time fits == plans from one
+    # batched fit_many characterization, (f, chips) exact
+    workloads = [Workload("fam%d" % i, None, terms=t)
+                 for i, t in enumerate(FAMILY_TERMS)]
+    seq_eng = PlanningEngine(pm, noise=0.01, seed=0)
+    seq_plans = [seq_eng.plan(w) for w in workloads]  # B=1 fits
+    batch_eng = PlanningEngine(pm, noise=0.01, seed=0)
+    batch_plans = batch_eng.plan_many(workloads)  # one B=8 fit_many
+    seq_cfg = [(p.frequency_ghz, p.chips) for p in seq_plans]
+    batch_cfg = [(p.frequency_ghz, p.chips) for p in batch_plans]
+    assert seq_cfg == batch_cfg, "batched fits diverge from sequential fits"
+
+    emit(
+        "svr_fit_many",
+        batch_us,
+        f"n_families={len(sets)}_seq_us={seq_us:.0f}_"
+        f"speedup={speedup:.1f}x_parity=ok",
+    )
+
+    # the governor closed loop (quick grid): paper's worst-case headline
+    t0 = time.time()
+    report = evaluate.compare_governors(
+        Node(seed=42),
+        char_freqs=FREQ_GRID[::2],
+        char_cores=range(1, MAX_CORES + 1, 2),
+        input_sizes=(1.0, 3.0, 5.0),
+        governor_cores=(1, 8, 32),
+    )
+    emit(
+        "governor_closed_loop",
+        (time.time() - t0) * 1e6,
+        f"worst_case={report.worst_case_ratio:.1f}x_"
+        f"mean={report.mean_ratio:.1f}x_best={report.best_case_ratio:.2f}x",
+    )
+
+    save_json(
+        "svr_fit",
+        {
+            "n_families": len(sets),
+            "n_train_points": int(sets[0][0].shape[0]),
+            "sequential_us": seq_us,
+            "batched_us": batch_us,
+            "speedup": speedup,
+            "config_parity": seq_cfg == batch_cfg,
+            "configs": batch_cfg,
+            "worst_case_governor_ratio": report.worst_case_ratio,
+            "governor_comparison": report.to_json(),
+        },
+    )
+    return speedup
+
+
+if __name__ == "__main__":
+    # PYTHONPATH=src python -m benchmarks.bench_svr_fit
+    print("name,us_per_call,derived")
+    run()

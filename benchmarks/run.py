@@ -17,7 +17,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--only",
-        choices=["paper", "roofline", "planner", "engine", "kernels"],
+        choices=["paper", "roofline", "planner", "engine", "kernels", "svr_fit"],
         default=None,
     )
     args = ap.parse_args()
@@ -55,6 +55,10 @@ def main() -> None:
         from benchmarks import bench_engine
 
         bench_engine.run()
+    if args.only in (None, "svr_fit"):
+        from benchmarks import bench_svr_fit
+
+        bench_svr_fit.run()
 
 
 if __name__ == "__main__":

@@ -5,12 +5,21 @@ grid and assembles the SVR training set. The sampler is a protocol: the
 node simulator here, a shell-command runner on real hardware, or the
 roofline-derived step-time sampler of the TPU planner — the methodology
 downstream is identical.
+
+Since PR 2 the batched path is the default: ``CharacterizationSet``
+collects the grids of many applications (from a ``NodeSampler`` sweep or
+from ``launch/dryrun.py`` artifacts via ``terms_from_artifacts`` /
+``workloads_from_artifacts``) and fits them all in ONE ``svr.fit_many``
+call — one stacked Gram build, batched KKT solves — instead of one
+sequential fit per application.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Protocol, Sequence
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -83,3 +92,135 @@ def subsample(ch: Characterization, fraction: float, seed: int = 0) -> Character
     n = ch.features.shape[0]
     idx = rng.choice(n, size=max(8, int(n * fraction)), replace=False)
     return Characterization(app=ch.app, features=ch.features[idx], times=ch.times[idx])
+
+
+# ---------------------------------------------------------------------------
+# batched characterization (PR 2): many apps -> one fit_many call
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CharacterizationSet:
+    """Training sets for many applications, fitted as one batch.
+
+    The §3.4 sweep is per-application, but nothing downstream is: the grids
+    share a shape, so the SVR fits stack. ``fit_all`` routes the whole set
+    through ``svr.fit_many`` — one batched Gram build + batched KKT solves —
+    and returns models aligned with ``items``.
+    """
+
+    items: List[Characterization]
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    def __iter__(self):
+        return iter(self.items)
+
+    def __getitem__(self, i) -> Characterization:
+        return self.items[i]
+
+    @property
+    def apps(self) -> List[str]:
+        return [c.app for c in self.items]
+
+    def fit_all(self, **kw) -> List[svr_mod.SVRParams]:
+        """One ``svr.fit_many`` call over every application's training set."""
+        return svr_mod.fit_many(self.items, **kw)
+
+    def models_by_app(self, **kw) -> Dict[str, svr_mod.SVRParams]:
+        return dict(zip(self.apps, self.fit_all(**kw)))
+
+    @classmethod
+    def from_node(
+        cls,
+        node: Node,
+        apps: Sequence[str],
+        *,
+        freqs: Sequence[float] = tuple(FREQ_GRID),
+        cores: Iterable[int] = tuple(range(1, MAX_CORES + 1)),
+        input_sizes: Sequence[float] = INPUT_SIZES,
+        repeats: int = 1,
+    ) -> "CharacterizationSet":
+        """Run the §3.4 sweep for every app on one (simulated) node."""
+        cores = tuple(cores)
+        return cls(
+            [
+                characterize(
+                    NodeSampler(node, app),
+                    app,
+                    freqs=freqs,
+                    cores=cores,
+                    input_sizes=input_sizes,
+                    repeats=repeats,
+                )
+                for app in apps
+            ]
+        )
+
+
+# ---------------------------------------------------------------------------
+# dry-run artifact ingestion: real lowered-HLO rooflines -> engine workloads
+# ---------------------------------------------------------------------------
+
+_ARTIFACT_RE = re.compile(r"^(?P<arch>.+)__(?P<shape>.+)__(?P<mesh>.+)\.json$")
+
+
+def terms_from_artifacts(
+    dryrun_dir: Optional[str] = None, *, mesh: str = "pod"
+) -> Dict[Tuple[str, str], "object"]:
+    """Scan a ``launch/dryrun.py`` artifact directory.
+
+    Returns {(arch_id, shape_name): RooflineTerms} for every successful
+    dry-run record on the given mesh — the measured-HLO counterpart of the
+    engine's analytic fallback. Missing directory -> empty dict.
+    """
+    from repro.core import engine as engine_mod  # lazy: avoid import cycle
+
+    dryrun_dir = dryrun_dir or engine_mod.DRYRUN_DIR
+    out: Dict[Tuple[str, str], object] = {}
+    if not os.path.isdir(dryrun_dir):
+        return out
+    for fname in sorted(os.listdir(dryrun_dir)):
+        m = _ARTIFACT_RE.match(fname)
+        if m is None or m.group("mesh") != mesh:
+            continue
+        terms = engine_mod.terms_from_dryrun(
+            m.group("arch"), m.group("shape"), dryrun_dir, mesh=mesh
+        )
+        if terms is not None:
+            out[(m.group("arch"), m.group("shape"))] = terms
+    return out
+
+
+def workloads_from_artifacts(
+    dryrun_dir: Optional[str] = None,
+    *,
+    mesh: str = "pod",
+    n_steps: int = 1,
+    objective: Optional[str] = None,
+) -> List["object"]:
+    """Every dry-run artifact as an engine ``Workload`` (fleet-scale intake).
+
+    The returned list goes to ``PlanningEngine.plan_many`` in one call: one
+    batched ``svr.fit_many`` characterization for all families, one batched
+    grid prediction, one objective tensor.
+    """
+    from repro.configs.base import SHAPES, ShapeCell
+    from repro.core.engine import Workload  # lazy: avoid import cycle
+
+    return [
+        Workload(
+            arch,
+            # keep the artifact's shape label even when the shape is no
+            # longer in SHAPES (stale/renamed sweeps must stay tellable
+            # apart in fleet reports, not collapse into "custom")
+            cell=SHAPES.get(shape) or ShapeCell(shape, 0, 0, "unknown"),
+            n_steps=n_steps,
+            objective=objective,
+            terms=terms,
+        )
+        for (arch, shape), terms in terms_from_artifacts(
+            dryrun_dir, mesh=mesh
+        ).items()
+    ]

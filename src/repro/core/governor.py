@@ -5,10 +5,13 @@ paper compares against:
 
 * **Performance / Powersave** — static max / min frequency.
 * **Userspace** — fixed user-chosen frequency.
-* **Ondemand** — the kernel's rule: if observed load exceeds
+* **Ondemand** — the kernel's rule: if observed load meets or exceeds
   ``up_threshold`` jump straight to f_max; otherwise pick the lowest
   frequency that keeps the projected load under the threshold
   (f = f_max · load / up_threshold, snapped up to the frequency table).
+  At a load of exactly ``up_threshold`` the proportional target equals
+  f_max only up to floating-point rounding — taking the jump branch keeps
+  the governor pinned instead of dithering between adjacent table entries.
 * **Conservative** — graceful stepping: load above ``up_threshold`` steps
   up by ``freq_step``·range, below ``down_threshold`` steps down.
 
@@ -95,7 +98,10 @@ class OndemandGovernor(Governor):
         self._f = self.initial_frequency()
 
     def next_frequency(self, utilization: float) -> float:
-        if utilization > self.up_threshold:
+        # >= not >: at exactly up_threshold the proportional target is f_max
+        # only up to FP rounding — snap_up of (f_max - 1 ulp) vs f_max would
+        # oscillate between adjacent table frequencies as noise dithers.
+        if utilization >= self.up_threshold:
             self._f = float(self.table[-1])
         else:
             target = float(self.table[-1]) * utilization / self.up_threshold

@@ -245,8 +245,7 @@ class Node:
                 break
         freqs_arr = np.asarray(freqs)
         powers_arr = np.asarray(powers)
-        e = float(np.sum(powers_arr * np.minimum(tick_s, t)))  # 1 Hz integration
-        # use exact tick durations for the last partial tick
+        # mean power × exact elapsed time (handles the last partial tick)
         e = float(np.mean(powers_arr) * t)
         return RunResult(
             time_s=t,

@@ -1,11 +1,12 @@
 """EnergyOptimalPlanner: compatibility shim over ``core.engine``.
 
-The canonical planning path is ``engine.PlanningEngine`` — memoized SVR
-characterization, batched grid prediction, multi-objective argmin, one
-constraint semantics. This module keeps the seed's TPU-planner surface
-(``EnergyOptimalPlanner.plan_for_workload`` and the roofline helpers) as
-thin delegations so existing callers (launch/train, runtime/elastic,
-benchmarks) keep working unchanged.
+The canonical planning path is ``engine.PlanningEngine`` — memoized,
+batched SVR characterization (``svr.fit_many``), batched grid prediction,
+multi-objective argmin, one constraint semantics. This module keeps the
+seed's TPU-planner surface (``EnergyOptimalPlanner.plan_for_workload`` and
+the roofline helpers) as thin delegations so remaining seed-era callers
+(launch/train) keep working unchanged; ``runtime/elastic`` and the
+benchmarks now target the engine directly.
 
 Semantics preserved from the seed: silent fastest-fallback when a deadline
 is infeasible (``on_infeasible="fastest"``). Unified with the node path:

@@ -8,11 +8,19 @@ We solve the standard ε-SVR dual in the β = α - α* parametrization:
 
     max_β  -½ βᵀ K β + yᵀ β - ε ‖β‖₁     s.t.  Σβ = 0,  |β_i| ≤ C
 
-with a float64 active-set method (equality-constrained KKT solves on the
-free set, box-bounded duals folded into the RHS, KKT-driven bind/release),
+with a float64 active-set method (equality-constrained KKT solves with
+box-bounded duals pinned by identity rows, KKT-driven bind/release),
 optionally polished by a monotone projected proximal-gradient (ISTA) pass.
 The Gram matrix — the compute hotspot — goes through ``kernels.ops.rbf_gram``
 (Pallas on TPU). Bias b comes from the KKT system directly.
+
+**Batched fits** (``fit_many``) are the hot path since PR 2: many same-shape
+training sets (one per workload family / application) are stacked — ragged
+sets padded with masked rows — their Gram tensor is built in ONE
+``rbf_gram`` call, the active-set KKT solves run batched over the leading
+dim (``np.linalg.solve`` on the (B, n+1, n+1) stack), and the optional ISTA
+polish is one ``vmap``ped pass. ``fit`` is a thin B = 1 wrapper, so single
+and batched fits share one numerical path.
 
 Features/targets are RAW by default (paper-faithful; the paper's γ = 0.5 is
 calibrated to raw (f, p, N) axes); ``standardize=True`` is available for
@@ -47,14 +55,21 @@ class SVRParams:
     log_target: bool = False
 
 
-def _project_sum_zero_box(beta: jnp.ndarray, C: float, iters: int = 50) -> jnp.ndarray:
-    """Project onto {Σβ = 0, |β_i| ≤ C}: bisection on λ in clip(β-λ,-C,C)."""
+def _project_sum_zero_box(
+    beta: jnp.ndarray, C, mask: Optional[jnp.ndarray] = None, iters: int = 50
+) -> jnp.ndarray:
+    """Project onto {Σβ = 0, |β_i| ≤ C}: bisection on λ in clip(β-λ,-C,C).
+
+    ``mask`` marks the real rows of a padded problem: masked-out entries are
+    pinned to 0 and excluded from the Σβ = 0 constraint.
+    """
+    m = jnp.ones_like(beta) if mask is None else mask.astype(beta.dtype)
 
     def s(lam):
-        return jnp.sum(jnp.clip(beta - lam, -C, C))
+        return jnp.sum(m * jnp.clip(beta - lam, -C, C))
 
-    lo = jnp.min(beta) - C
-    hi = jnp.max(beta) + C
+    lo = jnp.min(jnp.where(m > 0, beta, jnp.inf)) - C
+    hi = jnp.max(jnp.where(m > 0, beta, -jnp.inf)) + C
 
     def body(_, carry):
         lo, hi = carry
@@ -66,130 +81,203 @@ def _project_sum_zero_box(beta: jnp.ndarray, C: float, iters: int = 50) -> jnp.n
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     lam = 0.5 * (lo + hi)
-    return jnp.clip(beta - lam, -C, C)
+    return m * jnp.clip(beta - lam, -C, C)
 
 
-def _active_set_solve(
+def _active_set_solve_batch(
     K: np.ndarray,
     y: np.ndarray,
-    C: float,
-    eps: float,
+    C: np.ndarray,
+    eps: np.ndarray,
+    mask: np.ndarray,
     *,
     lam: float = 1e-3,
     max_rounds: int = 30,
 ):
-    """Active-set solve of the ε-SVR dual (float64, exact up to the tiny
-    ridge λ used for conditioning of the near-singular RBF Gram).
+    """Batched active-set solve of B ε-SVR duals (float64, exact up to the
+    tiny ridge λ used for conditioning of the near-singular RBF Gram).
 
-    KKT structure: free SVs satisfy  (Kβ)_i + λβ_i + b = y_i − ε·sign(β_i);
-    box-bounded SVs sit at ±C. We iterate:
-      1. solve the equality-constrained system on the free set (bounded
-         entries folded into the RHS),
-      2. clip any |β_F| > C to the bound and move them to the bound set.
-    The bound set only grows → terminates; 3–5 rounds in practice. The sign
-    in the ε term is refined from the previous iterate (ε is a tiny tube, so
-    one refinement suffices). NOTE: a plain "solve then clip" is *globally*
-    destructive for wide RBF kernels (every clipped dual perturbs every
-    prediction) — the re-solve on the free set is what makes this work.
+    K: (B, n, n) Gram stack (padded rows/cols zeroed), y: (B, n), C/eps:
+    (B,) per-item box/tube in standardized units, mask: (B, n) real rows.
+
+    KKT structure per item: free SVs satisfy
+    (Kβ)_i + λβ_i + b = y_i − ε·sign(β_i); box-bounded SVs sit at ±C. Every
+    item solves one (n+1)×(n+1) system per round — bound and padded duals
+    are pinned by identity rows instead of being folded into a shrunken free
+    system, which keeps the whole batch a single ``np.linalg.solve`` on the
+    (B, n+1, n+1) stack. Per round:
+      1. batched solve of the pinned KKT systems,
+      2. clip any |β_free| > C to the bound; bind only the worst quartile
+         of violators (binding everything at once overshoots — each clipped
+         dual perturbs all others through the kernel),
+      3. after a CLEAN solve, release bounded points whose KKT multiplier
+         sign flipped (a just-clipped iterate has a stale gradient and
+         would release its own binding immediately). A point at +C is
+         optimal iff (Kβ)_i + λβ_i − y_i + ε + b ≤ 0 (symmetric at −C).
+    Items converge independently (3–5 rounds in practice) and are dropped
+    from later rounds; a near-zero dual whose ε-tube sign dithers produces a
+    period-2 solution cycle, detected and stopped after both states have
+    been scored (the best-candidate tracker has already seen the whole
+    cycle, so this changes nothing but the round count). NOTE: a plain
+    "solve then clip" is *globally* destructive for wide RBF kernels — the
+    re-solve with pinned bounds is what makes this work. Returns
+    (beta (B, n), bias (B,)).
     """
-    n = K.shape[0]
+    B, n = y.shape
     K64 = np.asarray(K, np.float64)
     y64 = np.asarray(y, np.float64)
-    bound = np.zeros(n, bool)
-    beta = np.zeros(n)
-    sign = np.zeros(n)
-    b = 0.0
+    bound = np.zeros((B, n), bool)
+    beta = np.zeros((B, n))
+    sign = np.zeros((B, n))
+    sign_prev = np.full((B, n), 2.0)  # sentinel: matches no real sign pattern
 
-    def dual_obj(beta_, b_unused):
-        return 0.5 * beta_ @ (K64 @ beta_) - y64 @ beta_ + eps * np.abs(beta_).sum()
-
-    best = (np.zeros(n), float(np.median(y64)))
-    best_obj = dual_obj(best[0], best[1])
+    best_beta = np.zeros((B, n))
+    best_bias = np.array(
+        [float(np.median(y64[i, mask[i]])) if mask[i].any() else 0.0 for i in range(B)]
+    )
+    best_obj = np.zeros(B)  # dual objective of β = 0
+    done = np.zeros(B, bool)
 
     for _ in range(max_rounds):
-        F = ~bound
-        nf = int(F.sum())
-        if nf > 0:
-            kkt = np.zeros((nf + 1, nf + 1))
-            kkt[:nf, :nf] = K64[np.ix_(F, F)] + lam * np.eye(nf)
-            kkt[:nf, nf] = 1.0
-            kkt[nf, :nf] = 1.0
-            rhs = np.zeros(nf + 1)
-            rhs[:nf] = y64[F] - eps * sign[F]
-            if bound.any():
-                rhs[:nf] -= K64[np.ix_(F, bound)] @ beta[bound]
-                rhs[nf] = -np.sum(beta[bound])
-            sol = np.linalg.solve(kkt, rhs)
-            beta_f, b = sol[:nf], sol[nf]
-            viol = np.abs(beta_f) > C
-            beta = beta.copy()
-            beta[F] = np.clip(beta_f, -C, C)
-            sign_new = sign.copy()
-            sign_new[F] = np.sign(beta_f)
-        else:
-            viol = np.zeros(0, bool)
-            sign_new = sign
-
-        if not viol.any():
-            # feasible exact solve on this working set — always a candidate
-            o = dual_obj(beta, b)
-            if o < best_obj:
-                best_obj, best = o, (beta.copy(), float(b))
-
-        moved = False
-        if viol.any():
-            idx_f = np.where(F)[0]
-            # bind only the worst quartile of violators per round — binding
-            # everything at once overshoots (each clipped dual perturbs all
-            # others through the kernel)
-            over = np.abs(beta_f) - C
-            k = max(1, int(viol.sum() // 4))
-            worst = idx_f[np.argsort(-over)[:k]]
-            bound[worst] = True
-            moved = True
-        elif bound.any():
-            # KKT check on bounded points — run only after a CLEAN solve: a
-            # just-clipped iterate has a stale gradient and would release
-            # its own binding immediately (bind/release oscillation that
-            # never yields a feasible candidate). A point at +C is optimal
-            # iff  (Kβ)_i + λβ_i - y_i + ε + b ≤ 0  (symmetric at -C);
-            # violators return to the free set.
-            grad = K64 @ beta + lam * beta - y64 + b
-            release = bound & (
-                ((beta >= C - 1e-12) & (grad + eps > 1e-6))
-                | ((beta <= -C + 1e-12) & (grad - eps < -1e-6))
-            )
-            if release.any():
-                bound[release] = False
-                moved = True
-        if not moved and np.array_equal(sign_new, sign):
-            sign = sign_new
+        act = np.where(~done)[0]
+        if act.size == 0:
             break
-        sign = sign_new
+        Ka, ya = K64[act], y64[act]
+        Ca, ea = C[act][:, None], eps[act][:, None]
+        free = mask[act] & ~bound[act]
+        nf = free.sum(1)
 
-    return best
+        A = np.zeros((act.size, n + 1, n + 1))
+        rhs = np.zeros((act.size, n + 1))
+        A[:, :n, :n] = Ka
+        A[:, np.arange(n), np.arange(n)] += lam
+        A[:, :n, n] = 1.0
+        pi, pj = np.nonzero(~free)  # pin bound/padded duals: identity rows
+        A[pi, pj, :] = 0.0
+        A[pi, pj, pj] = 1.0
+        A[:, n, :n] = mask[act].astype(float)  # Σβ = 0 over real rows
+        degenerate = nf == 0  # all real duals bound: b has no equation left;
+        A[degenerate, n, :] = 0.0  # replace the Σβ row outright with b = 0
+        A[degenerate, n, n] = 1.0
+        rhs[:, :n] = ya - ea * sign[act]
+        rhs[pi, pj] = np.where(bound[act][pi, pj], beta[act][pi, pj], 0.0)
+        sol = np.linalg.solve(A, rhs[..., None])[..., 0]
+        beta_sol, b_sol = sol[:, :n], sol[:, n]
+
+        beta_new = np.where(free, np.clip(beta_sol, -Ca, Ca), beta[act])
+        sign_new = np.where(free, np.sign(beta_sol), sign[act])
+        viol = free & (np.abs(beta_sol) > Ca)
+        clean = ~viol.any(1)
+
+        obj = (
+            0.5 * np.einsum("bi,bij,bj->b", beta_new, Ka, beta_new)
+            - np.einsum("bi,bi->b", ya, beta_new)
+            + eps[act] * np.abs(beta_new).sum(1)
+        )
+        take = clean & (obj < best_obj[act])
+        best_beta[act[take]] = beta_new[take]
+        best_bias[act[take]] = b_sol[take]
+        best_obj[act[take]] = obj[take]
+
+        grad = (
+            np.einsum("bij,bj->bi", Ka, beta_new)
+            + lam * beta_new
+            - ya
+            + b_sol[:, None]
+        )
+        moved = np.zeros(act.size, bool)
+        for j in range(act.size):
+            i = act[j]
+            if viol[j].any():
+                over = np.where(viol[j], np.abs(beta_sol[j]) - C[i], -np.inf)
+                k = max(1, int(viol[j].sum() // 4))
+                bound[i, np.argsort(-over)[:k]] = True
+                moved[j] = True
+            elif bound[i].any():
+                release = bound[i] & (
+                    ((beta_new[j] >= C[i] - 1e-12) & (grad[j] + eps[i] > 1e-6))
+                    | ((beta_new[j] <= -C[i] + 1e-12) & (grad[j] - eps[i] < -1e-6))
+                )
+                if release.any():
+                    bound[i, release] = False
+                    moved[j] = True
+
+        stable = (sign_new == sign[act]).all(1)
+        cycled = (sign_new == sign_prev[act]).all(1)
+        beta[act] = beta_new
+        sign_prev[act] = sign[act]
+        sign[act] = sign_new
+        done[act] |= (~moved) & (stable | cycled)
+
+    return best_beta, best_bias
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
-def _ista_refine(
+def _solve_dual_ladder(
+    K: np.ndarray,
+    y: np.ndarray,
+    C: np.ndarray,
+    eps: np.ndarray,
+    mask: np.ndarray,
+    ridge: float,
+):
+    """Per-item ridge escalation over the batched active-set solve.
+
+    On unlucky noise draws the box constraint binds marginally and the
+    active-set solve can stall at the flat fallback (a constant predictor —
+    which downstream energy minimization would happily "optimize" to the
+    minimum-power corner). Escalate the conditioning ridge until the
+    training fit is sane; items that reach relative residual < 0.10 drop
+    out of the remaining rungs, so well-conditioned batches pay one rung.
+    """
+    B, n = y.shape
+    best_rel = np.full(B, np.inf)
+    out_beta = np.zeros((B, n))
+    out_bias = np.zeros(B)
+    todo = np.arange(B)
+    for lam in (ridge, 3 * ridge, 10 * ridge, 100 * ridge):
+        if todo.size == 0:
+            break
+        beta, bias = _active_set_solve_batch(
+            K[todo], y[todo], C[todo], eps[todo], mask[todo], lam=lam
+        )
+        resid = np.abs(
+            np.einsum("bij,bj->bi", K[todo], beta) + bias[:, None] - y[todo]
+        )
+        rel = (
+            np.where(mask[todo], resid / np.maximum(np.abs(y[todo]), 1e-9), 0.0).sum(1)
+            / np.maximum(mask[todo].sum(1), 1)
+        )
+        better = rel < best_rel[todo]
+        upd = todo[better]
+        out_beta[upd] = beta[better]
+        out_bias[upd] = bias[better]
+        best_rel[upd] = rel[better]
+        todo = todo[rel >= 0.10]
+    return out_beta, out_bias
+
+
+def _ista_refine_masked(
     K: jnp.ndarray,
     y: jnp.ndarray,
     beta0: jnp.ndarray,
-    C: float,
-    eps: float,
+    C,
+    eps,
+    mask: jnp.ndarray,
     iters: int = 200,
 ):
     """Monotone proximal-gradient refinement of the warm start towards the
     true ε-SVR optimum: step 1/λ_max(K), soft-threshold for ε‖β‖₁, exact
-    projection onto {Σβ=0, |β|≤C}. Keeps the best-objective iterate (ISTA on
-    this near-singular K is descent-stable where FISTA momentum is not)."""
+    projection onto {Σβ=0, |β|≤C, β_pad=0}. Keeps the best-objective iterate
+    (ISTA on this near-singular K is descent-stable where FISTA momentum is
+    not). One padded item of the batch — ``fit_many`` vmaps this."""
     n = K.shape[0]
+    m = mask.astype(K.dtype)
 
     def power_step(_, v):
         w = K @ v
         return w / (jnp.linalg.norm(w) + 1e-12)
 
-    v0 = jnp.ones((n,), K.dtype) / jnp.sqrt(n)
+    v0 = m / jnp.sqrt(jnp.maximum(jnp.sum(m), 1.0))
     v = jax.lax.fori_loop(0, 50, power_step, v0)
     L = jnp.maximum(v @ (K @ v), 1e-6)
     step = 0.9 / L
@@ -201,30 +289,249 @@ def _ista_refine(
         beta, best, best_obj = carry
         z = beta - step * (K @ beta - y)
         z = jnp.sign(z) * jnp.maximum(jnp.abs(z) - step * eps, 0.0)
-        beta_new = _project_sum_zero_box(z, C)
+        beta_new = _project_sum_zero_box(z, C, mask)
         o = obj(beta_new)
         take = o < best_obj
         best = jnp.where(take, beta_new, best)
         best_obj = jnp.where(take, o, best_obj)
         return beta_new, best, best_obj
 
-    beta0 = jnp.asarray(beta0, K.dtype)
+    beta0 = jnp.asarray(beta0, K.dtype) * m
     _, best, _ = jax.lax.fori_loop(0, iters, body, (beta0, beta0, obj(beta0)))
     return best
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _ista_refine_batch(K, y, beta0, C, eps, mask, iters: int = 200):
+    """The batched ISTA polish: ONE vmapped pass over the (B, n, n) Gram
+    stack. Compiles once per (B, n) shape."""
+    return jax.vmap(
+        lambda K_, y_, b_, C_, e_, m_: _ista_refine_masked(
+            K_, y_, b_, C_, e_, m_, iters
+        )
+    )(K, y, beta0, C, eps, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _ista_refine(
+    K: jnp.ndarray,
+    y: jnp.ndarray,
+    beta0: jnp.ndarray,
+    C: float,
+    eps: float,
+    iters: int = 200,
+):
+    """Single-problem ISTA refine (B = 1 view of ``_ista_refine_masked``)."""
+    return _ista_refine_masked(
+        K, y, beta0, C, eps, jnp.ones(K.shape[0], bool), iters
+    )
+
+
+def _recover_bias_masked(
+    K: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray, C, eps, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """KKT: for free SVs (0 < |β| < C):  b = y_i - (Kβ)_i - sign(β_i)·ε."""
+    f = K @ beta
+    tol = 1e-6 * C
+    free = mask & (jnp.abs(beta) > tol) & (jnp.abs(beta) < C - tol)
+    cand = y - f - jnp.sign(beta) * eps
+    n_free = jnp.sum(free)
+    b_free = jnp.sum(jnp.where(free, cand, 0.0)) / jnp.maximum(n_free, 1)
+    b_fallback = jnp.nanmedian(jnp.where(mask, y - f, jnp.nan))
+    return jnp.where(n_free > 0, b_free, b_fallback)
 
 
 def _recover_bias(
     K: jnp.ndarray, y: jnp.ndarray, beta: jnp.ndarray, C: float, eps: float
 ) -> jnp.ndarray:
-    """KKT: for free SVs (0 < |β| < C):  b = y_i - (Kβ)_i - sign(β_i)·ε."""
-    f = K @ beta
-    tol = 1e-6 * C
-    free = (jnp.abs(beta) > tol) & (jnp.abs(beta) < C - tol)
-    cand = y - f - jnp.sign(beta) * eps
-    n_free = jnp.sum(free)
-    b_free = jnp.sum(jnp.where(free, cand, 0.0)) / jnp.maximum(n_free, 1)
-    b_fallback = jnp.median(y - f)
-    return jnp.where(n_free > 0, b_free, b_fallback)
+    return _recover_bias_masked(K, y, beta, C, eps, jnp.ones(K.shape[0], bool))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def _gram_batched(x, y, gamma, impl):
+    """Jitted batched Gram build: compiles once per (B, n) shape — the
+    eager vmapped dispatch otherwise dominates small-batch fit time."""
+    return ops.rbf_gram(x, y, gamma, impl=impl)
+
+
+def _as_xy(item):
+    """Accept a (x, y) pair or a Characterization-like (.features/.times)."""
+    feats = getattr(item, "features", None)
+    if feats is not None:
+        return np.asarray(feats), np.asarray(item.times)
+    x, y = item
+    return np.asarray(x), np.asarray(y)
+
+
+def _fit_meta(x_mean, x_std, y_mean, y_std, eps: float, C: float):
+    """One item's standardization record. ε and C are specified in
+    raw-target units; the rescale to standardized units lives ONLY here —
+    both preprocessing branches (vectorized same-shape, per-item ragged)
+    must agree on it or fit/fit_many parity breaks."""
+    return (
+        x_mean,
+        x_std,
+        float(y_mean),
+        float(y_std),
+        eps / float(y_std),
+        C / float(y_std),
+    )
+
+
+def fit_many(
+    sets: Sequence,
+    *,
+    C: float = 10e3,
+    gamma: float = 0.5,
+    eps: float = 0.01,
+    iters: int = 0,
+    impl: Optional[str] = None,
+    log_target: bool = False,
+    standardize: bool = False,
+    ridge: float = 1e-3,
+) -> list:
+    """Fit B ε-SVR models in one batched pass — one model per training set.
+
+    ``sets`` is a sequence of (x, y) pairs or Characterization-like objects
+    (``.features``/``.times``); hyper-parameters are shared across the batch
+    (one workload *family* per set is the intended use). Ragged sets are
+    padded to the longest with masked rows, then:
+
+      * ONE batched ``rbf_gram`` call builds the (B, n, n) Gram tensor,
+      * the active-set KKT systems solve as one ``np.linalg.solve`` on the
+        (B, n+1, n+1) stack per round (per-item ridge escalation, items
+        dropping out as they converge),
+      * the optional ISTA polish (``iters > 0``) is one vmapped jitted pass.
+
+    Returns a list of ``SVRParams`` aligned with ``sets``. ``fit`` is the
+    B = 1 wrapper, so batched and sequential fits share one numerical path
+    (parity up to batched-LAPACK reduction order).
+    """
+    pairs = [_as_xy(s) for s in sets]
+    if not pairs:
+        return []
+
+    # preprocessing stays in numpy: per-item jnp dispatches here would eat
+    # the batching win before the solver even runs. Same-shape batches (the
+    # engine's per-family sets) standardize as one vectorized pass.
+    B = len(pairs)
+    ns = [int(np.shape(p[0])[0]) for p in pairs]
+    n_max = max(ns)
+    d = int(np.shape(pairs[0][0])[1])
+    if len(set(ns)) == 1:
+        X = np.stack([np.asarray(x, np.float32) for x, _ in pairs])
+        Y = np.stack([np.asarray(y, np.float32) for _, y in pairs])
+        if log_target:
+            Y = np.log(np.maximum(Y, 1e-12))
+        if standardize:
+            x_mean = np.mean(X, axis=1)
+            x_std = np.std(X, axis=1) + np.float32(1e-8)
+            y_mean = np.mean(Y, axis=1).astype(np.float32)
+            y_std = (np.std(Y, axis=1) + 1e-8).astype(np.float32)
+        else:
+            x_mean = np.zeros((B, d), np.float32)
+            x_std = np.ones((B, d), np.float32)
+            y_mean = np.zeros(B, np.float32)
+            y_std = np.ones(B, np.float32)
+        Xp = ((X - x_mean[:, None, :]) / x_std[:, None, :]).astype(np.float32)
+        Yp = ((Y - y_mean[:, None]) / y_std[:, None]).astype(np.float32)
+        mask = np.ones((B, n_max), bool)
+        xs_std = list(Xp)
+        metas = [
+            _fit_meta(x_mean[i], x_std[i], y_mean[i], y_std[i], eps, C)
+            for i in range(B)
+        ]
+    else:
+        xs_std, ys_std, metas = [], [], []
+        for x_raw, y_raw in pairs:
+            x = np.asarray(x_raw, np.float32)
+            y = np.asarray(y_raw, np.float32)
+            if log_target:
+                y = np.log(np.maximum(y, 1e-12))
+            if standardize:
+                x_mean = np.mean(x[None], axis=1)[0]
+                x_std = np.std(x[None], axis=1)[0] + np.float32(1e-8)
+                y_mean = np.float32(np.mean(y[None], axis=1)[0])
+                y_std = np.float32(np.std(y[None], axis=1)[0] + 1e-8)
+            else:
+                x_mean = np.zeros(x.shape[1], np.float32)
+                x_std = np.ones(x.shape[1], np.float32)
+                y_mean = np.float32(0.0)
+                y_std = np.float32(1.0)
+            xs_std.append(((x - x_mean) / x_std).astype(np.float32))
+            ys_std.append(((y - y_mean) / y_std).astype(np.float32))
+            metas.append(_fit_meta(x_mean, x_std, y_mean, y_std, eps, C))
+        Xp = np.zeros((B, n_max, d), np.float32)
+        Yp = np.zeros((B, n_max), np.float32)
+        mask = np.zeros((B, n_max), bool)
+        for i, (xs, ys) in enumerate(zip(xs_std, ys_std)):
+            Xp[i, : ns[i]] = xs
+            Yp[i, : ns[i]] = ys
+            mask[i, : ns[i]] = True
+
+    # the compute hotspot: every training set's Gram block in ONE call
+    K = _gram_batched(jnp.asarray(Xp), jnp.asarray(Xp), gamma, impl)
+    ragged = not mask.all()
+    K64 = np.asarray(K, np.float64)
+    if ragged:  # zero the padded Gram rows/cols (pad features are not real)
+        K64 *= mask[:, :, None] & mask[:, None, :]
+    C_s = np.asarray([m[5] for m in metas], np.float64)
+    eps_s = np.asarray([m[4] for m in metas], np.float64)
+
+    beta, bias = _solve_dual_ladder(
+        K64, np.asarray(Yp, np.float64), C_s, eps_s, mask, ridge
+    )
+
+    if iters > 0:
+        K32 = jnp.asarray(K)
+        if ragged:
+            K32 = K32 * (mask[:, :, None] & mask[:, None, :])
+        beta_r = _ista_refine_batch(
+            K32,
+            jnp.asarray(Yp),
+            jnp.asarray(beta, jnp.float32),
+            jnp.asarray(C_s, jnp.float32),
+            jnp.asarray(eps_s, jnp.float32),
+            jnp.asarray(mask),
+            iters=iters,
+        )
+        bias_r = np.asarray(
+            jax.vmap(_recover_bias_masked)(
+                K32,
+                jnp.asarray(Yp),
+                beta_r,
+                jnp.asarray(C_s, jnp.float32),
+                jnp.asarray(eps_s, jnp.float32),
+                jnp.asarray(mask),
+            ),
+            np.float64,
+        )
+        beta = np.asarray(beta_r, np.float64)
+        # only accept the polished bias where it stays sane (the polish can't
+        # worsen the dual objective, but bias recovery on a degenerate free
+        # set can); otherwise keep the active-set KKT bias.
+        sane = np.isfinite(bias_r) & (np.abs(bias_r - bias) <= 1.0)
+        bias = np.where(sane, bias_r, bias)
+
+    models = []
+    for i in range(B):
+        x_mean, x_std, y_mean, y_std, _, _ = metas[i]
+        models.append(
+            SVRParams(
+                # plain numpy: converted lazily at the first predict — eager
+                # per-model device_puts here would dominate small-batch fits
+                x_train=xs_std[i],
+                beta=beta[i, : ns[i]].astype(np.float32),
+                bias=float(bias[i]),
+                gamma=gamma,
+                x_mean=x_mean,
+                x_std=x_std,
+                y_mean=y_mean,
+                y_std=y_std,
+                log_target=log_target,
+            )
+        )
+    return models
 
 
 def fit(
@@ -248,71 +555,21 @@ def fit(
     standardizing first makes the kernel globally wide and the dual solve
     degenerate). ``standardize=True`` + ``log_target=True`` is the
     beyond-paper mode the TPU planner uses, whose features (chips, seq, batch)
-    span orders of magnitude."""
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    if log_target:
-        y = jnp.log(jnp.maximum(y, 1e-12))
-    if standardize:
-        x_mean = jnp.mean(x, axis=0)
-        x_std = jnp.std(x, axis=0) + 1e-8
-        y_mean = jnp.mean(y)
-        y_std = jnp.std(y) + 1e-8
-    else:
-        x_mean = jnp.zeros(x.shape[1], jnp.float32)
-        x_std = jnp.ones(x.shape[1], jnp.float32)
-        y_mean = jnp.float32(0.0)
-        y_std = jnp.float32(1.0)
-    xs = (x - x_mean) / x_std
-    ys = (y - y_mean) / y_std
-    # ε and C are specified in raw-target units; rescale to standardized units
-    eps_s = eps / float(y_std)
-    C_s = C / float(y_std)
+    span orders of magnitude.
 
-    K = ops.rbf_gram(xs, xs, gamma, impl=impl)
-    # Ridge escalation: on unlucky noise draws the box constraint binds
-    # marginally and the active-set solve can stall at the flat fallback
-    # (a constant predictor — which downstream energy minimization would
-    # happily "optimize" to the minimum-power corner). Escalate the
-    # conditioning ridge until the training fit is sane.
-    ys_np = np.asarray(ys)
-    best = None
-    for lam in (ridge, 3 * ridge, 10 * ridge, 100 * ridge):
-        beta_np, bias_np = _active_set_solve(
-            np.asarray(K), ys_np, C_s, eps_s, lam=lam
-        )
-        resid = np.abs(np.asarray(K, np.float64) @ beta_np + bias_np - ys_np)
-        rel = float(np.mean(resid / np.maximum(np.abs(ys_np), 1e-9)))
-        if best is None or rel < best[0]:
-            best = (rel, beta_np, bias_np)
-        if rel < 0.10:
-            break
-    _, beta_np, bias_np = best
-    if iters > 0:
-        beta = _ista_refine(
-            K, ys, jnp.asarray(beta_np, jnp.float32), C_s, eps_s, iters=iters
-        )
-        # only accept the polished bias if it stays sane (the polish can't
-        # worsen the dual objective, but bias recovery on a degenerate free
-        # set can); otherwise keep the active-set KKT bias.
-        bias = _recover_bias(K, ys, beta, C_s, eps_s)
-        if not np.isfinite(float(bias)) or abs(float(bias) - bias_np) > 1.0:
-            bias = jnp.asarray(bias_np)
-    else:
-        beta = jnp.asarray(beta_np, jnp.float32)
-        bias = jnp.asarray(bias_np)
-    return SVRParams(
-        x_train=xs,
-        beta=beta,
-        bias=float(bias),
+    Thin B = 1 wrapper over ``fit_many`` — single and batched fits share one
+    numerical path (the ridge-escalated batched active-set solve)."""
+    return fit_many(
+        [(x, y)],
+        C=C,
         gamma=gamma,
-        x_mean=x_mean,
-        x_std=x_std,
-        y_mean=float(y_mean),
-        y_std=float(y_std),
+        eps=eps,
+        iters=iters,
+        impl=impl,
         log_target=log_target,
-    )
-
+        standardize=standardize,
+        ridge=ridge,
+    )[0]
 
 def predict(params: SVRParams, x: np.ndarray, *, impl: Optional[str] = None):
     """Predict raw-unit targets for raw-unit features x: (m, d)."""
@@ -335,20 +592,40 @@ def predict_many(
     always are; heterogeneous inputs fall back to per-model ``predict``.
     Returns a list of per-model prediction arrays, aligned with ``models``.
     """
+    models = list(models)  # materialize once: generators must not exhaust
+    return predict_each(models, [x] * len(models), impl=impl)
+
+
+def predict_each(
+    models: Sequence[SVRParams],
+    xs: Sequence[np.ndarray],
+    *,
+    impl: Optional[str] = None,
+):
+    """Batched prediction: model i evaluated on its OWN query set ``xs[i]``.
+
+    The batched-characterization companion of ``predict_many`` (which shares
+    one grid): used to score every freshly fitted family on its own training
+    set in one ``rbf_gram`` call. Homogeneous models + same-shape queries
+    batch; anything else falls back to per-model ``predict``.
+    """
     models = list(models)
     if not models:
         return []
     m0 = models[0]
+    q0 = np.shape(xs[0])
     homogeneous = all(
         m.x_train.shape == m0.x_train.shape
         and m.gamma == m0.gamma
         and m.log_target == m0.log_target
         for m in models[1:]
-    )
+    ) and all(np.shape(q) == q0 for q in xs[1:])
     if not homogeneous:
-        return [predict(m, x, impl=impl) for m in models]
-    xq = jnp.asarray(x, jnp.float32)
-    Xs = jnp.stack([(xq - m.x_mean) / m.x_std for m in models])  # (B, m, d)
+        return [predict(m, q, impl=impl) for m, q in zip(models, xs)]
+    Xs = jnp.stack(
+        [(jnp.asarray(q, jnp.float32) - m.x_mean) / m.x_std
+         for m, q in zip(models, xs)]
+    )  # (B, m, d)
     Yt = jnp.stack([m.x_train for m in models])  # (B, n, d)
     K = ops.rbf_gram(Xs, Yt, m0.gamma, impl=impl)  # (B, m, n) — one call
     out = _predict_from_gram(

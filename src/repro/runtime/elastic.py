@@ -3,9 +3,11 @@
 Glues the pieces the rest of the framework provides:
   * capacity events (node failures, preemptions, quota changes) arrive as
     "the new device pool is D chips";
-  * `EnergyOptimalPlanner` picks the energy-optimal slice <= D for the
-    workload (the paper's method is the scaling policy —§Perf cell M shows
-    right-sizing IS the optimization for small models);
+  * `core.engine.PlanningEngine` picks the energy-optimal slice <= D for
+    the workload — the pool cap rides in as an engine `Constraints`
+    (max_cores), so the argmin itself respects the pool (the paper's
+    method is the scaling policy — §Perf cell M shows right-sizing IS the
+    optimization for small models);
   * checkpoint + reshard + resume: arrays are stored in logical layout, so
     restoring onto the new mesh is `device_put` with the new specs.
 
@@ -25,6 +27,7 @@ import jax
 
 from repro.checkpoint.manager import CheckpointManager, reshard
 from repro.configs.base import ArchDef, ShapeCell
+from repro.core.engine import Constraints, Workload
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_mesh
 from repro.parallel import sharding as shd
@@ -72,9 +75,24 @@ class ElasticController:
         self.events: list[ElasticEvent] = []
 
     def _choose_chips(self, available: int) -> int:
+        """Energy-optimal slice within the pool, straight from the engine.
+
+        ``planner`` may be a ``PlanningEngine`` or the legacy
+        ``EnergyOptimalPlanner`` shim (which carries one as ``.engine``).
+        The pool cap is an engine constraint, so the argmin itself honors
+        it; the final ``min`` only guards the infeasible-pool fallback
+        (pools below the chip grid's floor resolve to the fastest grid
+        point, which may exceed the pool)."""
         if self.planner is None:
             return available
-        plan = self.planner.plan_for_workload(self.arch.arch_id, self.cell)
+        engine = getattr(self.planner, "engine", self.planner)
+        plan = engine.plan(
+            Workload(
+                self.arch.arch_id,
+                self.cell,
+                constraints=Constraints(max_cores=available),
+            )
+        )
         return min(plan.chips, available)
 
     def build(self, chips: int):

@@ -1,11 +1,14 @@
-"""Elastic controller: mesh-shape policy + event bookkeeping (single-device;
-the live multi-device re-mesh is covered by tests/test_distributed.py)."""
+"""Elastic controller: mesh-shape policy, event bookkeeping, and the
+engine-driven slice choice (single-device; the live multi-device re-mesh is
+covered by tests/test_distributed.py)."""
+
+import types
 
 import jax
 import numpy as np
 import pytest
 
-from repro.runtime.elastic import ElasticEvent, mesh_shape_for
+from repro.runtime.elastic import ElasticController, ElasticEvent, mesh_shape_for
 
 
 def test_mesh_shape_policy():
@@ -22,3 +25,46 @@ def test_event_record():
     e = ElasticEvent(available_chips=128, reason="preemption")
     assert e.available_chips == 128
     assert e.time > 0
+
+
+def _controller(planner, tmp_path):
+    from repro.configs.base import SHAPES
+
+    arch = types.SimpleNamespace(arch_id="elastic-test-arch")
+    return ElasticController(
+        arch, None, SHAPES["train_4k"], None, None, planner=planner
+    )
+
+
+def test_choose_chips_routes_through_engine(fleet_pm, tmp_path):
+    """The controller plans straight on PlanningEngine (no shim): the pool
+    cap becomes an engine constraint, so the chosen slice fits the pool."""
+    from repro.core.engine import PlanningEngine, Workload
+
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0, dryrun_dir=str(tmp_path))
+    ctl = _controller(eng, tmp_path)
+    chips = ctl._choose_chips(64)
+    assert chips <= 64 and chips in eng.chip_grid
+    # the engine characterized the workload family exactly once
+    key = Workload("elastic-test-arch", ctl.cell).key
+    assert key in eng._fits
+    # unconstrained pool: still a grid configuration
+    assert ctl._choose_chips(10_000) in eng.chip_grid
+    # pool below the chip grid floor: fastest-fallback may exceed the pool,
+    # the controller clamps to it
+    assert ctl._choose_chips(8) <= 8
+
+
+def test_choose_chips_accepts_legacy_shim(fleet_pm, tmp_path):
+    from repro.core.planner import EnergyOptimalPlanner
+
+    shim = EnergyOptimalPlanner(fleet_pm, dryrun_dir=str(tmp_path))
+    ctl = _controller(shim, tmp_path)
+    assert ctl._choose_chips(128) <= 128
+
+
+def test_choose_chips_without_planner():
+    ctl = ElasticController(
+        types.SimpleNamespace(arch_id="x"), None, None, None, None
+    )
+    assert ctl._choose_chips(96) == 96

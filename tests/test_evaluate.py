@@ -1,0 +1,181 @@
+"""core.evaluate closed loop: engine plans vs stock governors (paper §4.2),
+plus the ondemand exact-threshold regression."""
+
+import numpy as np
+import pytest
+
+from repro.core import evaluate, governor
+from repro.core.node_sim import FREQ_GRID, MAX_CORES, Node
+
+QUICK = dict(
+    char_freqs=FREQ_GRID[::3],
+    char_cores=range(1, MAX_CORES + 1, 4),
+    char_inputs=(1.0, 3.0),
+    input_sizes=(3.0,),
+    governor_cores=(4, 32),
+)
+
+
+@pytest.fixture(scope="module")
+def quick_report():
+    return evaluate.compare_governors(
+        Node(seed=42), apps=("blackscholes", "raytrace"), **QUICK
+    )
+
+
+def test_report_structure(quick_report):
+    r = quick_report
+    assert {p.app for p in r.plans} == {"blackscholes", "raytrace"}
+    assert {g.governor for g in r.runs} == set(evaluate.STOCK_GOVERNORS)
+    # 2 apps x 1 input x 4 governors x 2 core counts
+    assert len(r.runs) == 16
+    assert all(run.energy_j > 0 and run.time_s > 0 for run in r.runs)
+    assert all(1 <= p.cores <= MAX_CORES for p in r.plans)
+    assert all(FREQ_GRID[0] <= p.frequency_ghz <= FREQ_GRID[-1] for p in r.plans)
+
+
+def test_paper_ordering(quick_report):
+    """Plans beat every governor (noise tol), and the worst-case governor
+    configuration burns multiples of the optimal energy (paper: up to 14x)."""
+    r = quick_report
+    assert r.worst_case_ratio > 2.0
+    assert r.mean_ratio > 1.1
+    assert r.plan_beats_all(tol=0.08)  # quick grids leave a few % SVR error
+
+
+def test_report_table_and_json(quick_report):
+    txt = quick_report.table()
+    for g in evaluate.STOCK_GOVERNORS:
+        assert g in txt
+    js = quick_report.to_json()
+    assert js["worst_case_ratio"] == quick_report.worst_case_ratio
+    assert set(js["ratios_by_governor"]) == set(evaluate.STOCK_GOVERNORS)
+    assert len(js["plans"]) == len(quick_report.plans)
+
+
+def test_make_governor_names():
+    table = np.asarray(FREQ_GRID)
+    for name in evaluate.STOCK_GOVERNORS:
+        g = evaluate.make_governor(name, table)
+        assert g.name == name
+        assert float(g.table[-1]) == pytest.approx(float(FREQ_GRID[-1]))
+    with pytest.raises(ValueError, match="unknown governor"):
+        evaluate.make_governor("turbo")
+
+
+@pytest.mark.slow
+def test_full_grid_ordering_tighter():
+    """With the full characterization frequency grid the SVR error shrinks
+    and the plan ties-or-beats every governor within 5%."""
+    report = evaluate.compare_governors(
+        Node(seed=42),
+        apps=("blackscholes", "swaptions"),
+        input_sizes=(1.0, 5.0),
+        char_freqs=FREQ_GRID,
+        char_cores=range(1, 33),
+        char_inputs=(1.0, 3.0, 5.0),
+        governor_cores=(1, 32),
+        repeats=1,
+    )
+    assert report.plan_beats_all(tol=0.05)
+    assert report.worst_case_ratio > 5.0  # powersave at 1 core
+
+
+# ---------------------------------------------------------------------------
+# governor edge cases (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_ondemand_exact_threshold_does_not_oscillate():
+    """A load of exactly up_threshold must peg f_max, not dither between
+    adjacent table frequencies via the FP-rounded proportional target."""
+    g = governor.OndemandGovernor(up_threshold=0.95)
+    for u in (0.95, 0.95 - 1e-12, np.float64(0.95)):
+        g.reset()
+        seen = {g.next_frequency(float(u)) for _ in range(25)}
+        assert len(seen) == 1, f"oscillated at load {u!r}: {sorted(seen)}"
+    g.reset()
+    assert g.next_frequency(0.95) == pytest.approx(float(g.table[-1]))
+
+
+def test_snap_up_is_stable_on_table_frequencies():
+    """snap_up of any table frequency (or of it +- 1 ulp) is that frequency —
+    the anti-oscillation property the governors rely on."""
+    g = governor.OndemandGovernor()
+    for f in g.table:
+        f = float(f)
+        assert g.snap_up(f) == f
+        assert g.snap_up(np.nextafter(f, 0.0)) == f
+        assert g.snap_up(f - 1e-10) == f
+
+
+# ---------------------------------------------------------------------------
+# CharacterizationSet + dry-run artifact ingestion (tentpole plumbing)
+# ---------------------------------------------------------------------------
+
+
+def test_characterization_set_from_node_fits_batch():
+    from repro.core.characterize import CharacterizationSet
+
+    cset = CharacterizationSet.from_node(
+        Node(seed=3),
+        ("blackscholes", "swaptions"),
+        freqs=FREQ_GRID[::3],
+        cores=range(1, 33, 8),
+        input_sizes=(1.0, 3.0),
+    )
+    assert len(cset) == 2 and cset.apps == ["blackscholes", "swaptions"]
+    models = cset.models_by_app()
+    from repro.core import svr
+
+    for ch in cset:
+        assert svr.pae(models[ch.app], ch.features, ch.times) < 0.10
+
+
+def test_workloads_from_artifacts_roundtrip(tmp_path, fleet_pm):
+    """Synthetic dry-run records -> RooflineTerms -> engine.plan_many in
+    one call (the fleet-scale ingestion path)."""
+    import json
+
+    from repro.core import characterize
+    from repro.core.engine import PlanningEngine
+
+    recs = {
+        ("qwen1.5-110b", "train_4k"): (3.2e12, 5.1e11, 2.4e10),
+        ("gemma3-12b", "prefill_32k"): (8.0e11, 9.0e10, 4.0e9),
+    }
+    for (arch, shape), (fl, mem, coll) in recs.items():
+        (tmp_path / f"{arch}__{shape}__pod.json").write_text(
+            json.dumps(
+                {
+                    "ok": True,
+                    "hlo": {
+                        "flops_per_device": fl,
+                        "memory_bytes_per_device": mem,
+                        "collective_bytes_per_device": coll,
+                    },
+                }
+            )
+        )
+    # a failed record must be skipped
+    (tmp_path / "broken__train_4k__pod.json").write_text(
+        json.dumps({"ok": False})
+    )
+
+    terms = characterize.terms_from_artifacts(str(tmp_path))
+    assert set(terms) == set(recs)
+    assert all(t.source == "dryrun" for t in terms.values())
+
+    workloads = characterize.workloads_from_artifacts(str(tmp_path))
+    assert len(workloads) == 2
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0, dryrun_dir=str(tmp_path))
+    plans = eng.plan_many(workloads)  # one fit_many + one batched predict
+    assert {p.arch for p in plans} == {a for a, _ in recs}
+    assert all(p.terms_source == "dryrun" for p in plans)
+    assert all(p.energy_per_step_j > 0 for p in plans)
+
+
+def test_terms_from_artifacts_missing_dir():
+    from repro.core import characterize
+
+    assert characterize.terms_from_artifacts("/nonexistent/dir") == {}
