@@ -46,7 +46,7 @@ def run():
     # tensor compiles per batch size, so warm both the B=16 and B=1 shapes
     warm = PlanningEngine(pm, noise=0.01, seed=0)
     warm.plan_many(workloads)
-    warm.clear_cache()
+    warm.clear_cache(analytic=False)
     warm.plan(workloads[0])
 
     seq_eng = PlanningEngine(pm, noise=0.01, seed=0)
@@ -54,7 +54,10 @@ def run():
     def sequential():
         plans = []
         for w in workloads:
-            seq_eng.clear_cache()  # the seed path re-characterized every plan
+            # the seed path re-characterized (re-FIT) every plan but kept
+            # the analytic-terms memo; clearing it too would time
+            # jax.eval_shape re-traces instead of fit/predict cost
+            seq_eng.clear_cache(analytic=False)
             plans.append(seq_eng.plan(w))
         return plans
 

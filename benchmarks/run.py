@@ -17,7 +17,10 @@ def main() -> None:
     )
     ap.add_argument(
         "--only",
-        choices=["paper", "roofline", "planner", "engine", "kernels", "svr_fit"],
+        choices=[
+            "paper", "roofline", "planner", "engine", "kernels", "svr_fit",
+            "fleet",
+        ],
         default=None,
     )
     args = ap.parse_args()
@@ -59,6 +62,10 @@ def main() -> None:
         from benchmarks import bench_svr_fit
 
         bench_svr_fit.run()
+    if args.only in (None, "fleet"):
+        from benchmarks import bench_fleet
+
+        bench_fleet.run()
 
 
 if __name__ == "__main__":

@@ -145,14 +145,27 @@ def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
 
     The energy/time frontier is what deadline negotiation trades along: each
     successive point is slower but strictly cheaper in energy.
+
+    Deterministic ordering contract (the fleet scheduler's deadline
+    fallback walks this list, so selection must be reproducible): candidates
+    are sorted by time ascending, ties broken on energy then on flat grid
+    index, and the returned frontier is strictly increasing in time and
+    strictly decreasing in energy. Non-finite points (masked-out grid
+    entries carrying ``inf``) never appear.
     """
     T = np.asarray(T)
     E = np.asarray(E)
-    order = np.lexsort((E.ravel(), T.ravel()))
+    t_flat = T.ravel()
+    e_flat = E.ravel()
+    # lexsort: last key is primary -> time, then energy, then flat index.
+    order = np.lexsort((np.arange(t_flat.size), e_flat, t_flat))
     out: List[Tuple[int, ...]] = []
     best_e = np.inf
     for i in order:
-        e = float(E.ravel()[i])
+        t = float(t_flat[i])
+        e = float(e_flat[i])
+        if not (np.isfinite(t) and np.isfinite(e)):
+            continue
         if e < best_e:
             best_e = e
             out.append(np.unravel_index(i, T.shape))
@@ -205,11 +218,13 @@ def terms_from_dryrun(
         rec = json.load(f)
     if not rec.get("ok"):
         return None
-    h = rec["hlo"]
+    # Optional fields default to zero cost: partial dry-run records (e.g. a
+    # single-device run with no collectives section) still characterize.
+    h = rec.get("hlo") or {}
     return RooflineTerms(
-        compute_s=h["flops_per_device"] / PEAK_FLOPS_BF16,
-        memory_s=h["memory_bytes_per_device"] / HBM_BW,
-        collective_s=h["collective_bytes_per_device"] / ICI_BW,
+        compute_s=h.get("flops_per_device", 0.0) / PEAK_FLOPS_BF16,
+        memory_s=h.get("memory_bytes_per_device", 0.0) / HBM_BW,
+        collective_s=h.get("collective_bytes_per_device", 0.0) / ICI_BW,
         source="dryrun",
     )
 
@@ -385,8 +400,38 @@ class PlanningEngine:
     def default(cls, **kw) -> "PlanningEngine":
         return cls(fit_fleet_power(FleetTelemetry()), **kw)
 
-    def clear_cache(self) -> None:
+    def clear_cache(self, *, analytic: bool = True) -> None:
+        """Drop every cached characterization.
+
+        By default clears BOTH memo layers: the per-engine fit cache and
+        the module-level ``terms_analytic`` (arch_id, cell) memo — a
+        mutated cell definition re-registered under the same arch_id must
+        not keep serving stale roofline terms after an explicit cache
+        clear. The analytic memo is PROCESS-WIDE (shared by every engine
+        instance); pass ``analytic=False`` to drop only this engine's fits
+        — e.g. to force re-fits without re-paying the ~0.2 s eval_shape
+        trace per family, or to leave other engines' terms untouched.
+        """
         self._fits.clear()
+        if analytic:
+            _ANALYTIC_TERMS_CACHE.clear()
+
+    def install_fit(self, key: Hashable, model, pae: float, terms) -> None:
+        """Install (or refresh) a characterization fitted outside the engine.
+
+        The online re-characterization path: fleet telemetry detects a
+        stale workload family, refits its step-time surface from *measured*
+        samples (one ``svr.fit_many`` batch for all stale families) and
+        installs the fresh models here under the same ``Workload.key``.
+        The grid prediction is recomputed lazily on the next plan.
+        """
+        self._fits[key] = _Fit(model=model, pae=float(pae), terms=terms)
+
+    def cached_terms(self, key: Hashable):
+        """The terms behind the cached fit for ``key`` (None if unfitted) —
+        lets re-characterization compound drift estimates across refreshes."""
+        fit = self._fits.get(key)
+        return fit.terms if fit is not None else None
 
     # -- characterization ---------------------------------------------------
 
@@ -435,12 +480,9 @@ class PlanningEngine:
             for (key, terms), model, (x, y), pred in zip(
                 missing.items(), models, sets, preds
             ):
-                pae = float(
-                    np.mean(
-                        np.abs(np.asarray(pred) - y) / np.maximum(y, 1e-9)
-                    )
+                self._fits[key] = _Fit(
+                    model=model, pae=svr_mod.pae_from_pred(pred, y), terms=terms
                 )
-                self._fits[key] = _Fit(model=model, pae=pae, terms=terms)
         return [self._fits[w.key] for w in workloads]
 
     def _fit_for(self, w: Workload) -> _Fit:
@@ -554,8 +596,9 @@ class PlanningEngine:
                 power_w=float(self._W[idx]),
                 energy_per_step_j=float(E[idx]),
             )
+            # masked points carry inf in both axes; pareto_frontier's
+            # non-finite filter guarantees they never appear
             for idx in pareto_frontier(
                 np.where(mask, fit.T, np.inf), np.where(mask, E, np.inf)
             )
-            if mask[idx]
         ]

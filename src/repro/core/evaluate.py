@@ -158,6 +158,30 @@ class ComparisonReport:
             "runs": [dataclasses.asdict(r) for r in self.runs],
         }
 
+    @classmethod
+    def from_json(cls, payload: dict) -> "ComparisonReport":
+        """Round-trip loader for ``to_json`` output.
+
+        The one serialization path for node- and fleet-scale reports
+        (``fleet.report.FleetReport`` embeds a ``ComparisonReport`` payload
+        and loads it through here). Derived summary fields in the payload
+        are ignored — they are recomputed from the records; unknown keys in
+        plan/run records are dropped so newer payloads load on older code.
+        """
+        plan_fields = {f.name for f in dataclasses.fields(PlanRun)}
+        run_fields = {f.name for f in dataclasses.fields(GovernorRun)}
+        return cls(
+            plans=[
+                PlanRun(**{k: v for k, v in p.items() if k in plan_fields})
+                for p in payload.get("plans", ())
+            ],
+            runs=[
+                GovernorRun(**{k: v for k, v in r.items() if k in run_fields})
+                for r in payload.get("runs", ())
+            ],
+            objective=payload.get("objective", "energy"),
+        )
+
 
 def _mean_energy(runs) -> Tuple[float, float]:
     return (

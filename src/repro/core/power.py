@@ -70,10 +70,12 @@ def _design_matrix(f: jnp.ndarray, p: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarra
 
 @jax.jit
 def _ols(X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    # Normal equations with light damping; the basis is tiny (4 columns) so
-    # this is exact to float precision for any sane sample grid.
-    G = X.T @ X + 1e-6 * jnp.eye(X.shape[1], dtype=X.dtype)
-    return jnp.linalg.solve(G, X.T @ y)
+    # Minimum-norm least squares. The basis is tiny (4 columns), but it can
+    # go rank-deficient on legitimate grids: a single-socket node's sweep
+    # has s ≡ 1, making the [1, s] columns collinear — normal equations
+    # blow up there (NaN coefficients) while lstsq splits c3/c4 into the
+    # minimum-norm solution whose *predictions* are still exact.
+    return jnp.linalg.lstsq(X, y)[0]
 
 
 def fit_power_model(

@@ -651,10 +651,17 @@ def mae(params: SVRParams, x, y) -> float:
     return float(jnp.mean(jnp.abs(predict(params, x) - jnp.asarray(y))))
 
 
+def pae_from_pred(pred, y) -> float:
+    """Percentage absolute error from precomputed predictions — the one
+    definition shared by ``pae``, the engine's batched characterization
+    scoring and the fleet's re-characterization path."""
+    y = np.asarray(y, np.float64)
+    return float(np.mean(np.abs(np.asarray(pred, np.float64) - y) / np.maximum(y, 1e-9)))
+
+
 def pae(params: SVRParams, x, y) -> float:
     """Percentage absolute error (paper Table 1 metric)."""
-    y = jnp.asarray(y, jnp.float32)
-    return float(jnp.mean(jnp.abs(predict(params, x) - y) / jnp.maximum(y, 1e-9)))
+    return pae_from_pred(predict(params, x), y)
 
 
 def kfold_cv(

@@ -1,0 +1,60 @@
+"""Cluster-scale energy-optimal scheduling (beyond-paper fleet subsystem).
+
+The paper plans one energy-optimal (f, p) configuration for one node; this
+package serves a *fleet* of such nodes from one batched planning path. The
+scheduling round is:
+
+    plan_many → place → run → telemetry → re-fit
+
+1. **plan_many** — every pending (app, input, deadline) job becomes one
+   engine ``Workload`` (the family's hashable ``AppTerms`` as its SVR cache
+   key, ``Constraints(max_cores=free cores, max_time_s=deadline slack)``)
+   and the whole queue is planned in ONE ``PlanningEngine.plan_many`` call.
+2. **place** — energy-aware bin-pack: the reference-node plan is projected
+   onto each node via admin-known spec skews (plan energy × node skew) and
+   the cheapest feasible node wins; when the energy optimum cannot make the
+   deadline anywhere, the scheduler walks the job's ``pareto()`` frontier
+   cheapest-first and buys feasibility with the fewest extra joules.
+3. **run** — the placed jobs execute on the simulated heterogeneous nodes
+   (``cluster.FleetNode``: skewed power truth, speed skew, injected drift).
+4. **telemetry** — measured ``RunResult``s stream into the
+   ``TelemetryHub``; a sliding-window relative-error drift detector marks
+   stale workload families.
+5. **re-fit** — ALL stale families are re-characterized from telemetry
+   (the believed surface rescaled by the measured drift ratio, anchored by
+   the windowed real observations — no extra measurement runs) in ONE
+   ``svr.fit_many`` batch and installed back into the engine cache
+   (``PlanningEngine.install_fit``) — the ROADMAP's "online
+   re-characterization".
+
+``python -m repro.fleet [--quick]`` runs the full comparison: the
+engine-scheduled fleet vs the same fleet under each stock governor with
+naive FIFO placement (joules + makespan + per-node utilization), with a
+mid-simulation drift event exercising the re-characterization loop.
+"""
+
+from repro.fleet.cluster import (  # noqa: F401
+    AppTerms,
+    FleetNode,
+    NodePool,
+    NodeSpec,
+    family_key,
+    make_pool,
+)
+from repro.fleet.report import (  # noqa: F401
+    FleetReport,
+    ScenarioStats,
+    run_fleet_comparison,
+)
+from repro.fleet.scheduler import (  # noqa: F401
+    CompletedJob,
+    FleetScheduler,
+    Job,
+    Placement,
+    fleet_engine,
+)
+from repro.fleet.telemetry import (  # noqa: F401
+    DriftDetector,
+    Observation,
+    TelemetryHub,
+)

@@ -1,0 +1,314 @@
+"""Heterogeneous node pool: the cluster-scale measurement substrate.
+
+The paper characterizes ONE node (2× Xeon E5-2698v3); a fleet is many such
+nodes that are *almost* alike — different steppings ship different frequency
+tables, chassis variants change the static-power floor, the silicon lottery
+skews the dynamic parcel, and binned parts run a few percent slower. This
+module models that spread:
+
+* ``NodeSpec`` — the admin-known facts about one node: core count,
+  frequency table, static/dynamic power skews (multipliers on the paper
+  Eq. 7 coefficient groups) and a speed skew (>1 = slower silicon). The
+  scheduler may use these (they are inventory data, not measurements) to
+  project a reference-node plan onto a specific node:
+  ``expected_*`` below is exactly the "plan energy × node skew" bin-pack
+  score.
+* ``FleetNode`` — a live node: wraps a ``node_sim.Node`` whose ground-truth
+  power coefficients are skewed per spec, applies the speed skew and any
+  injected *drift* (unannounced slowdown of one application family — the
+  thing online re-characterization must catch) to every run, and keeps the
+  reservation ledger used for free-core accounting and utilization.
+* ``NodePool`` — the fleet: free-core queries at a sim time, reservation
+  bookkeeping, next-completion lookup, per-node utilization.
+* ``AppTerms`` — the bridge into ``core.engine``: a duck-typed
+  ``RooflineTerms`` whose ``step_time(f, cores)`` is the *believed*
+  execution-time surface of one (app, input) family on the reference node.
+  It is frozen/hashable, so it doubles as the engine's characterization
+  cache key: one SVR fit per family, shared by every job in the family.
+
+Everything downstream (the engine argmin, SVR fits, governor baselines)
+treats these nodes exactly like the single-node path treats ``Node`` —
+swap in real hosts and the fleet methodology is unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.node_sim import (
+    CORES_PER_SOCKET,
+    FREQ_GRID,
+    MAX_CORES,
+    Node,
+    PROFILES,
+    RunResult,
+)
+from repro.core.power import PAPER_COEFFS, PowerModel
+
+REFERENCE_FREQS: Tuple[float, ...] = tuple(float(f) for f in FREQ_GRID)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """Admin-known per-node hardware facts (inventory, not measurements)."""
+
+    name: str
+    max_cores: int = MAX_CORES
+    freq_table: Tuple[float, ...] = REFERENCE_FREQS
+    static_power_skew: float = 1.0  # scales c3 (chassis) + c4 (per socket)
+    dynamic_power_skew: float = 1.0  # scales c1 f^3 + c2 f (silicon lottery)
+    speed_skew: float = 1.0  # >1: the same work takes longer here
+
+    def truth_coeffs(self, base=PAPER_COEFFS) -> Tuple[float, float, float, float]:
+        c1, c2, c3, c4 = base
+        return (
+            c1 * self.dynamic_power_skew,
+            c2 * self.dynamic_power_skew,
+            c3 * self.static_power_skew,
+            c4 * self.static_power_skew,
+        )
+
+    def snap_frequency(self, f: float) -> float:
+        """Lowest table frequency >= f (kernel relation_l); table max if none."""
+        table = np.asarray(self.freq_table, float)
+        idx = int(np.searchsorted(table, f - 1e-9))
+        return float(table[min(idx, len(table) - 1)])
+
+    def sockets(self, cores: int) -> int:
+        return int(np.ceil(cores / CORES_PER_SOCKET))
+
+    # -- plan projection: "plan energy × node skew" ------------------------
+
+    def expected_time(self, reference_time_s: float) -> float:
+        return reference_time_s * self.speed_skew
+
+    def expected_power(self, power_model: PowerModel, f: float, p: int) -> float:
+        """Project the *fitted reference* power model onto this node by the
+        known coefficient-group skews (the model itself stays one fit)."""
+        f = self.snap_frequency(f)
+        dyn = p * (power_model.c1 * f**3 + power_model.c2 * f)
+        stat = power_model.c3 + power_model.c4 * self.sockets(p)
+        return self.dynamic_power_skew * dyn + self.static_power_skew * stat
+
+    def expected_energy(
+        self, power_model: PowerModel, f: float, p: int, reference_time_s: float
+    ) -> float:
+        return self.expected_power(power_model, f, p) * self.expected_time(
+            reference_time_s
+        )
+
+
+@dataclasses.dataclass
+class Reservation:
+    start_s: float
+    end_s: float
+    cores: int
+    job_id: int
+
+
+class FleetNode:
+    """One live node: skewed ground truth + drift + reservation ledger."""
+
+    def __init__(self, spec: NodeSpec, seed: int = 0, base_coeffs=PAPER_COEFFS):
+        self.spec = spec
+        self.node = Node(seed=seed, power_coeffs=spec.truth_coeffs(base_coeffs))
+        self._drift: Dict[str, float] = {}
+        self.reservations: List[Reservation] = []
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    # -- drift (the unannounced part of the truth) -------------------------
+
+    def apply_drift(self, app: str, factor: float) -> None:
+        """Multiply the true runtime of one application family (dataset
+        growth, thermal throttling, a library regression — the scheduler is
+        NOT told; telemetry has to notice)."""
+        self._drift[app] = self._drift.get(app, 1.0) * float(factor)
+
+    def time_scale(self, app: str) -> float:
+        """speed skew × accumulated drift — the true (hidden) slowdown."""
+        return self.spec.speed_skew * self._drift.get(app, 1.0)
+
+    # -- measurement substrate --------------------------------------------
+
+    def _rescale(self, r: RunResult, scale: float) -> RunResult:
+        t = r.time_s * scale
+        return RunResult(
+            time_s=t,
+            energy_j=r.mean_power_w * t,  # power unchanged, duration scaled
+            mean_freq_ghz=r.mean_freq_ghz,
+            mean_power_w=r.mean_power_w,
+            freq_trace=r.freq_trace,
+            power_trace=r.power_trace,
+        )
+
+    def run_fixed(self, app: str, f: float, p: int, n: float) -> RunResult:
+        f = self.spec.snap_frequency(f)
+        p = min(int(p), self.spec.max_cores)
+        return self._rescale(self.node.run_fixed(app, f, p, n), self.time_scale(app))
+
+    def run_governor(self, app: str, governor, p: int, n: float) -> RunResult:
+        p = min(int(p), self.spec.max_cores)
+        return self._rescale(
+            self.node.run_governor(app, governor, p, n), self.time_scale(app)
+        )
+
+    def stress_grid(self, freqs=None, cores=None):
+        freqs = self.spec.freq_table if freqs is None else freqs
+        cores = range(1, self.spec.max_cores + 1) if cores is None else cores
+        return self.node.stress_grid(freqs, cores)
+
+    # -- reservation ledger ------------------------------------------------
+
+    def free_cores(self, now: float) -> int:
+        busy = sum(r.cores for r in self.reservations if r.end_s > now + 1e-12)
+        return self.spec.max_cores - busy
+
+    def reserve(self, start_s: float, end_s: float, cores: int, job_id: int) -> None:
+        self.reservations.append(Reservation(start_s, end_s, cores, job_id))
+
+    def utilization(self, horizon_s: float) -> float:
+        """Busy core-seconds / capacity core-seconds over [0, horizon]."""
+        if horizon_s <= 0:
+            return 0.0
+        busy = sum(
+            (min(r.end_s, horizon_s) - min(r.start_s, horizon_s)) * r.cores
+            for r in self.reservations
+        )
+        return busy / (self.spec.max_cores * horizon_s)
+
+
+class NodePool:
+    """The fleet: heterogeneous nodes plus the shared capacity queries."""
+
+    def __init__(self, nodes: Sequence[FleetNode]):
+        if not nodes:
+            raise ValueError("a fleet needs at least one node")
+        self.nodes = list(nodes)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __iter__(self):
+        return iter(self.nodes)
+
+    def __getitem__(self, i) -> FleetNode:
+        return self.nodes[i]
+
+    @property
+    def reference(self) -> FleetNode:
+        """The characterization host: plans are made on its scale, then
+        projected per node via the spec skews."""
+        return self.nodes[0]
+
+    def max_free_cores(self, now: float) -> int:
+        return max(n.free_cores(now) for n in self.nodes)
+
+    def next_completion(self, now: float) -> Optional[float]:
+        ends = [
+            r.end_s
+            for n in self.nodes
+            for r in n.reservations
+            if r.end_s > now + 1e-12
+        ]
+        return min(ends) if ends else None
+
+    def apply_drift(self, app: str, factor: float) -> None:
+        """Fleet-wide drift of one application family (e.g. its dataset
+        grew): every node's truth shifts; the scheduler's model does not."""
+        for n in self.nodes:
+            n.apply_drift(app, factor)
+
+    def utilization(self, horizon_s: float) -> Dict[str, float]:
+        return {n.name: n.utilization(horizon_s) for n in self.nodes}
+
+
+# ---------------------------------------------------------------------------
+# believed performance surfaces: the engine-facing characterization bridge
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AppTerms:
+    """Duck-typed ``RooflineTerms`` for node applications.
+
+    ``step_time(f, cores)`` is the scheduler's *believed* reference-node
+    execution-time surface for one (app, input) workload family —
+    ``time_scale`` carries what re-characterization has learned about drift
+    (1.0 until telemetry says otherwise). Frozen/hashable: the instance
+    with ``time_scale == 1.0`` is the family's engine cache key, so every
+    job in a family shares one SVR fit.
+    """
+
+    app: str
+    input_size: float
+    time_scale: float = 1.0
+    source: str = "profile"
+
+    def step_time(self, f_ghz: float, cores) -> float:
+        return (
+            PROFILES[self.app].time(float(f_ghz), int(cores), self.input_size)
+            * self.time_scale
+        )
+
+    @property
+    def family(self) -> Tuple[str, float]:
+        return (self.app, self.input_size)
+
+
+def family_key(app: str, input_size: float) -> AppTerms:
+    """The canonical engine cache key of one workload family."""
+    return AppTerms(app=app, input_size=float(input_size))
+
+
+# ---------------------------------------------------------------------------
+# default heterogeneous pools
+# ---------------------------------------------------------------------------
+
+DEFAULT_SPECS: Tuple[NodeSpec, ...] = (
+    # the paper's reference node: full table, nominal power, nominal speed
+    NodeSpec("ref-0"),
+    # low-power chassis: fewer cores, capped table, cheaper static floor
+    NodeSpec(
+        "eco-1",
+        max_cores=24,
+        freq_table=REFERENCE_FREQS[:8],
+        static_power_skew=0.85,
+        dynamic_power_skew=0.92,
+        speed_skew=1.12,
+    ),
+    # newer stepping: slightly faster, hungrier chassis
+    NodeSpec(
+        "turbo-2",
+        static_power_skew=1.08,
+        dynamic_power_skew=1.05,
+        speed_skew=0.94,
+    ),
+    # previous-gen part: half the cores, coarse table, slow and leaky
+    NodeSpec(
+        "legacy-3",
+        max_cores=16,
+        freq_table=REFERENCE_FREQS[::2],
+        static_power_skew=1.22,
+        dynamic_power_skew=1.10,
+        speed_skew=1.28,
+    ),
+)
+
+
+def make_pool(
+    n_nodes: int = 4, seed: int = 0, specs: Sequence[NodeSpec] = DEFAULT_SPECS
+) -> NodePool:
+    """A deterministic heterogeneous pool: specs cycle, seeds stay distinct."""
+    nodes = []
+    for i in range(n_nodes):
+        spec = specs[i % len(specs)]
+        if i >= len(specs):
+            spec = dataclasses.replace(spec, name=f"{spec.name}-{i}")
+        nodes.append(FleetNode(spec, seed=seed + 101 * i))
+    return NodePool(nodes)

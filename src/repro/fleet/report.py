@@ -1,0 +1,343 @@
+"""Fleet-scale comparison report: engine scheduling vs stock-governor FIFO.
+
+The fleet analogue of ``core.evaluate``'s Tables 2-5 loop. The same job
+trace (and the same mid-simulation drift events) runs under:
+
+* **engine** — ``FleetScheduler``: one ``plan_many`` per round, energy-aware
+  bin-pack, pareto deadline fallback, online re-characterization;
+* **each stock governor** — naive FIFO placement (first node with free
+  cores, grab them all) with the node's DVFS managed by the governor, i.e.
+  what a cluster looks like when nobody plans.
+
+Per-scenario totals (joules, makespan, per-node utilization, deadline
+misses) live in ``ScenarioStats``; the per-job engine-vs-governor energy
+ratios are assembled into a genuine ``evaluate.ComparisonReport``, so the
+node-level and fleet-level reports share ONE serialization path
+(``ComparisonReport.to_json`` / ``from_json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.evaluate import (
+    STOCK_GOVERNORS,
+    ComparisonReport,
+    GovernorRun,
+    PlanRun,
+    make_governor,
+)
+from repro.fleet.cluster import NodePool, make_pool
+from repro.fleet.scheduler import (
+    FleetScheduler,
+    Job,
+    apply_due_events,
+    fleet_engine,
+    next_event_time,
+)
+from repro.fleet.telemetry import TelemetryHub
+
+
+@dataclasses.dataclass
+class ScenarioStats:
+    """One fleet scenario (engine or one governor) over the whole trace."""
+
+    name: str
+    total_energy_j: float
+    makespan_s: float
+    utilization: Dict[str, float]
+    deadline_misses: int
+    n_jobs: int
+    job_energy_j: Dict[int, float]
+    job_time_s: Dict[int, float]
+    recharacterizations: int = 0
+    pareto_fallbacks: int = 0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        # json keys are strings; keep the loader symmetric
+        d["job_energy_j"] = {str(k): v for k, v in self.job_energy_j.items()}
+        d["job_time_s"] = {str(k): v for k, v in self.job_time_s.items()}
+        return d
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "ScenarioStats":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in payload.items() if k in fields}
+        d["job_energy_j"] = {
+            int(k): v for k, v in payload.get("job_energy_j", {}).items()
+        }
+        d["job_time_s"] = {
+            int(k): v for k, v in payload.get("job_time_s", {}).items()
+        }
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# the naive baseline: stock governor + FIFO placement
+# ---------------------------------------------------------------------------
+
+
+def run_governor_fleet(
+    pool: NodePool,
+    jobs: Sequence[Job],
+    governor_name: str,
+    *,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    max_rounds: int = 10_000,
+) -> ScenarioStats:
+    """FIFO the trace through the pool under one stock governor.
+
+    Placement is what an unplanned cluster does: first node (by index) with
+    any free cores takes the job on ALL of them; the governor manages the
+    frequency. Deadlines are not consulted — misses are counted after the
+    fact.
+    """
+    pending = sorted(jobs, key=lambda j: (j.arrival_s, j.job_id))
+    events = sorted(drift_events)
+    ei = 0
+    now = 0.0
+    job_energy: Dict[int, float] = {}
+    job_time: Dict[int, float] = {}
+    finishes: Dict[int, float] = {}
+    misses = 0
+    for _ in range(max_rounds):
+        if not pending and pool.next_completion(now) is None:
+            break
+        ei = apply_due_events(pool, events, ei, now)
+        still_pending = []
+        for job in pending:
+            if job.arrival_s > now + 1e-12:
+                still_pending.append(job)
+                continue
+            placed = False
+            for node in pool:
+                free = node.free_cores(now)
+                if free <= 0:
+                    continue
+                gov = make_governor(governor_name, node.spec.freq_table)
+                result = node.run_governor(job.app, gov, free, job.input_size)
+                finish = now + result.time_s
+                node.reserve(now, finish, free, job.job_id)
+                job_energy[job.job_id] = result.energy_j
+                job_time[job.job_id] = result.time_s
+                finishes[job.job_id] = finish
+                misses += finish > job.deadline_s + 1e-9
+                placed = True
+                break
+            if not placed:
+                still_pending.append(job)
+        pending = still_pending
+        nxt = next_event_time(pool, pending, events, ei, now)
+        if nxt is None:
+            break
+        now = nxt
+    makespan = max(finishes.values(), default=0.0)
+    return ScenarioStats(
+        name=governor_name,
+        total_energy_j=float(sum(job_energy.values())),
+        makespan_s=makespan,
+        utilization=pool.utilization(makespan),
+        deadline_misses=int(misses),
+        n_jobs=len(job_energy),
+        job_energy_j=job_energy,
+        job_time_s=job_time,
+    )
+
+
+def run_engine_fleet(
+    pool: NodePool,
+    jobs: Sequence[Job],
+    *,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    engine=None,
+    telemetry: Optional[TelemetryHub] = None,
+    char_freqs=None,
+    char_cores=None,
+) -> Tuple[ScenarioStats, FleetScheduler]:
+    """The planned fleet: one ``FleetScheduler`` over the whole trace."""
+    engine = engine if engine is not None else fleet_engine(pool)
+    sched = FleetScheduler(
+        pool,
+        engine,
+        telemetry,
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+    )
+    completed = sched.run(jobs, drift_events=drift_events)
+    stats = ScenarioStats(
+        name="engine",
+        total_energy_j=sched.total_energy_j(),
+        makespan_s=sched.makespan_s,
+        utilization=sched.utilization(),
+        deadline_misses=sched.deadline_misses(),
+        n_jobs=len(completed),
+        job_energy_j={
+            c.placement.job.job_id: c.result.energy_j for c in completed
+        },
+        job_time_s={c.placement.job.job_id: c.result.time_s for c in completed},
+        recharacterizations=sched.telemetry.n_recharacterizations,
+        pareto_fallbacks=sum(c.placement.pareto_fallback for c in completed),
+    )
+    return stats, sched
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Fleet totals per scenario + the shared per-job comparison report."""
+
+    scenarios: Dict[str, ScenarioStats]  # "engine" + one per governor
+    comparison: ComparisonReport  # per-job ratios, evaluate.py serialization
+
+    @property
+    def engine(self) -> ScenarioStats:
+        return self.scenarios["engine"]
+
+    def governor_names(self) -> List[str]:
+        return [n for n in self.scenarios if n != "engine"]
+
+    def energy_ratio(self, governor: str) -> float:
+        return self.scenarios[governor].total_energy_j / max(
+            self.engine.total_energy_j, 1e-12
+        )
+
+    def engine_beats_all(self, tol: float = 0.05) -> bool:
+        """Fleet-level paper ordering: the engine-scheduled fleet spends
+        <= every governor fleet's joules (tol absorbs sim noise)."""
+        return all(
+            self.energy_ratio(g) >= 1.0 - tol for g in self.governor_names()
+        )
+
+    def table(self) -> str:
+        lines = [
+            f"{'scenario':<14}{'E kJ':>10}{'ratio':>8}{'makespan s':>12}"
+            f"{'util%':>8}{'misses':>8}{'refits':>8}",
+            "-" * 68,
+        ]
+        order = ["engine"] + self.governor_names()
+        for name in order:
+            s = self.scenarios[name]
+            util = sum(s.utilization.values()) / max(len(s.utilization), 1)
+            ratio = self.energy_ratio(name) if name != "engine" else 1.0
+            lines.append(
+                f"{name:<14}{s.total_energy_j / 1e3:>10.1f}{ratio:>7.2f}x"
+                f"{s.makespan_s:>12.0f}{100 * util:>7.1f}%"
+                f"{s.deadline_misses:>8d}{s.recharacterizations:>8d}"
+            )
+        lines.append(
+            "per-job governor/engine energy ratios: "
+            f"best {self.comparison.best_case_ratio:.2f}x, "
+            f"mean {self.comparison.mean_ratio:.2f}x, "
+            f"worst {self.comparison.worst_case_ratio:.2f}x; "
+            f"pareto deadline fallbacks: {self.engine.pareto_fallbacks}"
+        )
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {
+            "scenarios": {n: s.to_json() for n, s in self.scenarios.items()},
+            "comparison": self.comparison.to_json(),
+        }
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "FleetReport":
+        return cls(
+            scenarios={
+                n: ScenarioStats.from_json(s)
+                for n, s in payload["scenarios"].items()
+            },
+            comparison=ComparisonReport.from_json(payload["comparison"]),
+        )
+
+
+def build_comparison(
+    engine_stats: ScenarioStats,
+    governor_stats: Sequence[ScenarioStats],
+    jobs: Sequence[Job],
+    completed,
+) -> ComparisonReport:
+    """Per-job ratios as a genuine ``ComparisonReport`` (shared schema)."""
+    by_id = {j.job_id: j for j in jobs}
+    plans = []
+    placements = {c.placement.job.job_id: c.placement for c in completed}
+    for jid in sorted(engine_stats.job_energy_j):
+        job = by_id[jid]
+        p = placements[jid]
+        plans.append(
+            PlanRun(
+                app=job.app,
+                input_size=job.input_size,
+                frequency_ghz=p.frequency_ghz,
+                cores=p.cores,
+                predicted_energy_j=p.predicted_energy_j,
+                time_s=engine_stats.job_time_s[jid],
+                energy_j=engine_stats.job_energy_j[jid],
+            )
+        )
+    runs = []
+    for gs in governor_stats:
+        for jid in sorted(gs.job_energy_j):
+            job = by_id[jid]
+            e_engine = engine_stats.job_energy_j.get(jid)
+            if e_engine is None:
+                continue
+            runs.append(
+                GovernorRun(
+                    app=job.app,
+                    input_size=job.input_size,
+                    governor=gs.name,
+                    cores=0,  # FIFO grabs whatever was free, not one count
+                    time_s=gs.job_time_s[jid],
+                    energy_j=gs.job_energy_j[jid],
+                    ratio=gs.job_energy_j[jid] / max(e_engine, 1e-12),
+                )
+            )
+    return ComparisonReport(plans=plans, runs=runs)
+
+
+def run_fleet_comparison(
+    jobs: Sequence[Job],
+    *,
+    n_nodes: int = 4,
+    seed: int = 0,
+    governors: Sequence[str] = STOCK_GOVERNORS,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    engine_kw: Optional[dict] = None,
+    char_freqs=None,
+    char_cores=None,
+) -> Tuple[FleetReport, FleetScheduler]:
+    """Run the same trace under the engine and every governor.
+
+    Every scenario gets a FRESH pool built from the same specs and seeds,
+    so the ground truth (power skews, noise streams, drift) is identical
+    and the only difference is who decides (f, p, node).
+    """
+    engine_kw = dict(engine_kw or {})
+    pool = make_pool(n_nodes, seed=seed)
+    engine = fleet_engine(pool, **engine_kw)
+    engine_stats, sched = run_engine_fleet(
+        pool,
+        jobs,
+        drift_events=drift_events,
+        engine=engine,
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+    )
+    scenarios = {"engine": engine_stats}
+    gov_stats = []
+    for gname in governors:
+        gpool = make_pool(n_nodes, seed=seed)
+        gs = run_governor_fleet(gpool, jobs, gname, drift_events=drift_events)
+        scenarios[gname] = gs
+        gov_stats.append(gs)
+    report = FleetReport(
+        scenarios=scenarios,
+        comparison=build_comparison(engine_stats, gov_stats, jobs, sched.completed),
+    )
+    return report, sched

@@ -1,0 +1,511 @@
+"""Energy-optimal fleet scheduling: one batched argmin per round.
+
+The scheduling round (the loop the whole subsystem exists to run):
+
+    plan_many  →  place  →  run  →  telemetry  →  re-fit
+       │            │        │         │            │
+       │            │        │         │            └ stale families only,
+       │            │        │         │              ONE ``svr.fit_many``
+       │            │        │         └ measured RunResults vs plan
+       │            │        └ simulated nodes, reservation ledger
+       │            └ energy-aware bin-pack: plan energy × node skew,
+       │              ``pareto()`` fallback when the optimum misses a
+       │              deadline
+       └ EVERY pending job in ONE ``PlanningEngine.plan_many`` call
+
+Per round the scheduler builds one ``Workload`` per pending job — the
+family's hashable ``AppTerms`` as the characterization key, plus
+``Constraints(max_cores=free cores, max_time_s=deadline slack)`` — and
+batch-plans them all in a single ``plan_many`` call: one ``svr.fit_many``
+over the cache-missing families, one batched grid prediction, one jitted
+objective tensor. Placement projects the reference-node plan onto each
+node via the admin-known spec skews and picks the feasible node with the
+lowest expected energy. When the energy-optimal configuration cannot meet
+the job's deadline on any node with capacity, the scheduler walks the
+job's energy/time ``pareto()`` frontier from the cheapest point toward the
+fastest and takes the first (point, node) pair that fits — spending the
+fewest extra joules that buy deadline feasibility.
+
+The sensing half closes the loop: completed runs stream into the
+``TelemetryHub``; families whose windowed relative time-model error
+crosses the drift threshold are re-characterized *from telemetry* — the
+believed surface rescaled by the measured drift ratio and anchored by the
+windowed real observations, so the refit costs no extra measurement runs
+— with ALL stale families fitted in ONE ``svr.fit_many`` batch and the
+fresh models installed into the engine cache via
+``PlanningEngine.install_fit`` under the same family keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import svr as svr_mod
+from repro.core.engine import (
+    ENGINE_FIT_KW,
+    TIME_FLOOR,
+    Constraints,
+    EnergyPlan,
+    PlanningEngine,
+    Workload,
+)
+from repro.core.node_sim import CORES_PER_SOCKET, RunResult
+from repro.core.power import fit_power_model
+from repro.fleet.cluster import AppTerms, FleetNode, NodePool, family_key
+from repro.fleet.telemetry import Family, Observation, TelemetryHub
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One queued workload: (app, input) plus its service-level deadline."""
+
+    job_id: int
+    app: str
+    input_size: float
+    deadline_s: float  # absolute sim time by which the job must finish
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Placement:
+    """One placed job: the chosen (node, f, p) and its projected cost."""
+
+    job: Job
+    node: str
+    frequency_ghz: float
+    cores: int
+    start_s: float
+    predicted_time_s: float  # node-projected (reference time × speed skew)
+    predicted_energy_j: float  # node-projected plan energy
+    pareto_fallback: bool = False  # True: deadline bought on the frontier
+
+
+@dataclasses.dataclass
+class CompletedJob:
+    placement: Placement
+    result: RunResult
+    finish_s: float
+    met_deadline: bool
+
+
+@dataclasses.dataclass
+class RoundLog:
+    """What one scheduling round did (the auditable invariant record)."""
+
+    now: float
+    n_pending: int
+    planned: bool  # True: this round issued its (single) plan_many call
+    n_placed: int = 0
+    refit_families: List[Family] = dataclasses.field(default_factory=list)
+
+
+def apply_due_events(
+    pool: NodePool,
+    events: Sequence[Tuple[float, str, float]],
+    ei: int,
+    now: float,
+) -> int:
+    """Apply every (time, app, factor) drift event due by ``now`` to the
+    pool's truth; returns the index of the first still-future event. Shared
+    by the engine scheduler and the governor-FIFO baseline so both
+    scenarios shift at identical sim times."""
+    while ei < len(events) and events[ei][0] <= now + 1e-12:
+        _, app, factor = events[ei]
+        pool.apply_drift(app, factor)
+        ei += 1
+    return ei
+
+
+def next_event_time(
+    pool: NodePool,
+    pending: Sequence[Job],
+    events: Sequence[Tuple[float, str, float]],
+    ei: int,
+    now: float,
+) -> Optional[float]:
+    """The next sim time anything can change: a job completion, a future
+    arrival, or a scheduled drift event. ``None`` means nothing is left to
+    wait for (an unplaceable remainder). One definition — the engine and
+    baseline simulation loops must advance their clocks identically."""
+    nexts = []
+    completion = pool.next_completion(now)
+    if completion is not None:
+        nexts.append(completion)
+    arrivals = [j.arrival_s for j in pending if j.arrival_s > now + 1e-12]
+    if arrivals:
+        nexts.append(min(arrivals))
+    if ei < len(events):
+        nexts.append(max(events[ei][0], now + 1e-6))
+    return min(nexts) if nexts else None
+
+
+def fleet_engine(
+    pool: NodePool,
+    *,
+    freqs: Optional[Sequence[float]] = None,
+    cores: Optional[Sequence[int]] = None,
+    noise: float = 0.01,
+    seed: int = 0,
+    objective: str = "energy",
+    power_model=None,
+) -> PlanningEngine:
+    """A ``PlanningEngine`` on the fleet's reference-node scale.
+
+    The grid is (reference frequency table × 1..max cores in the pool);
+    the power model is fitted from the reference node's §3.3 stress sweep
+    (or injected). Node heterogeneity enters at *placement* via the spec
+    skews, not here — one engine, one argmin, N nodes.
+    """
+    ref = pool.reference
+    freqs = tuple(ref.spec.freq_table) if freqs is None else tuple(freqs)
+    if cores is None:
+        cores = tuple(range(1, max(n.spec.max_cores for n in pool) + 1))
+    else:
+        cores = tuple(int(c) for c in cores)
+    if power_model is None:
+        power_model = fit_power_model(*ref.stress_grid(freqs, cores))
+    return PlanningEngine(
+        power_model,
+        freq_grid=freqs,
+        chip_grid=cores,
+        chips_per_pod=CORES_PER_SOCKET,
+        noise=noise,
+        seed=seed,
+        objective=objective,
+        on_infeasible="fastest",
+    )
+
+
+class FleetScheduler:
+    """Round-based energy-optimal scheduler over a heterogeneous pool."""
+
+    def __init__(
+        self,
+        pool: NodePool,
+        engine: PlanningEngine,
+        telemetry: Optional[TelemetryHub] = None,
+        *,
+        char_freqs: Optional[Sequence[float]] = None,
+        char_cores: Optional[Sequence[int]] = None,
+    ):
+        self.pool = pool
+        self.engine = engine
+        self.telemetry = telemetry if telemetry is not None else TelemetryHub()
+        # re-characterization refit grid (defaults to the planning grid)
+        self.char_freqs = tuple(
+            engine.freq_grid if char_freqs is None else char_freqs
+        )
+        self.char_cores = tuple(
+            engine.chip_grid if char_cores is None else char_cores
+        )
+        self.rounds: List[RoundLog] = []
+        self.completed: List[CompletedJob] = []
+        self._pending: List[Job] = []
+        self._finish_queue: List[CompletedJob] = []
+
+    # -- the believed model ------------------------------------------------
+
+    def _workload(self, job: Job, now: float, free_cap: int) -> Workload:
+        slack = job.deadline_s - now
+        return Workload(
+            arch=job.app,
+            terms=family_key(job.app, job.input_size),
+            constraints=Constraints(
+                max_cores=free_cap,
+                max_time_s=slack if slack > 0 else None,
+            ),
+        )
+
+    # -- one scheduling round ---------------------------------------------
+
+    def step(self, now: float) -> RoundLog:
+        """Run one round at sim time ``now``: ingest completions, refresh
+        stale families (one ``fit_many``), plan every pending job (one
+        ``plan_many``), place and launch what fits."""
+        self._ingest(now)
+        refit = self._refresh_stale(now)
+        pending_now = [j for j in self._pending if j.arrival_s <= now + 1e-12]
+        cap = self.pool.max_free_cores(now)
+        log = RoundLog(
+            now=now,
+            n_pending=len(pending_now),
+            planned=bool(pending_now) and cap > 0,
+            refit_families=refit,
+        )
+        if log.planned:
+            workloads = [self._workload(j, now, cap) for j in pending_now]
+            plans = self.engine.plan_many(workloads)  # THE one batched call
+            order = sorted(
+                range(len(pending_now)),
+                key=lambda i: (pending_now[i].deadline_s, pending_now[i].job_id),
+            )
+            for i in order:
+                placement = self._place(pending_now[i], workloads[i], plans[i], now)
+                if placement is not None:
+                    self._launch(placement)
+                    self._pending.remove(pending_now[i])
+                    log.n_placed += 1
+        self.rounds.append(log)
+        return log
+
+    # -- placement: energy-aware bin-pack + pareto deadline fallback -------
+
+    def _candidates(
+        self,
+        now: float,
+        terms,
+        cores: int,
+        f: float,
+        ref_time_s: float,
+        slack: float,
+        require_deadline: bool,
+    ) -> List[Tuple[float, int, FleetNode, float, float]]:
+        """(expected energy, node index, node, expected time, snapped f),
+        cheapest first — "plan energy × node skew" over nodes with capacity.
+
+        A node whose frequency table cannot reach the planned f will run at
+        its snapped (usually lower) frequency; the believed surface
+        ``terms`` supplies the time ratio between the two, so the deadline
+        check, the bin-pack score and the telemetry prediction all describe
+        the run the node will actually execute."""
+        out = []
+        for idx, node in enumerate(self.pool):
+            if node.free_cores(now) < cores:
+                continue
+            f_snap = node.spec.snap_frequency(f)
+            t_ref = ref_time_s
+            if f_snap != f:
+                believed = terms.step_time(f, cores)
+                t_ref *= terms.step_time(f_snap, cores) / max(believed, 1e-12)
+            t_exp = node.spec.expected_time(t_ref)
+            if require_deadline and t_exp > slack:
+                continue
+            e_exp = node.spec.expected_energy(
+                self.engine.power, f_snap, cores, t_ref
+            )
+            out.append((e_exp, idx, node, t_exp, f_snap))
+        return sorted(out, key=lambda c: (c[0], c[1]))
+
+    def _place(
+        self, job: Job, workload: Workload, plan: EnergyPlan, now: float
+    ) -> Optional[Placement]:
+        slack = job.deadline_s - now
+        frontier = None
+        # First pass honors the deadline; if nothing in the pool can make
+        # it, the second pass places for minimum energy and eats the miss
+        # (better a late cheap job than a starved queue).
+        terms = workload.terms
+        passes = (True, False) if slack > 0 else (False,)
+        for require_deadline in passes:
+            cand = self._candidates(
+                now, terms, plan.chips, plan.frequency_ghz, plan.step_time_s,
+                slack, require_deadline,
+            )
+            if cand:
+                e_exp, _, node, t_exp, f_snap = cand[0]
+                return Placement(
+                    job=job,
+                    node=node.name,
+                    frequency_ghz=f_snap,
+                    cores=plan.chips,
+                    start_s=now,
+                    predicted_time_s=t_exp,
+                    predicted_energy_j=e_exp,
+                    pareto_fallback=False,
+                )
+            # deadline (or capacity) infeasible at the energy optimum: walk
+            # the frontier cheapest-first and buy the missing feasibility
+            # with the fewest extra joules. pareto() is deterministic
+            # (time-sorted, energy tie-break), so this walk is reproducible.
+            if frontier is None:
+                frontier = self.engine.pareto(workload)
+            for point in reversed(frontier):  # slowest/cheapest first
+                cand = self._candidates(
+                    now, terms, point.chips, point.frequency_ghz,
+                    point.step_time_s, slack, require_deadline,
+                )
+                if cand:
+                    e_exp, _, node, t_exp, f_snap = cand[0]
+                    return Placement(
+                        job=job,
+                        node=node.name,
+                        frequency_ghz=f_snap,
+                        cores=point.chips,
+                        start_s=now,
+                        predicted_time_s=t_exp,
+                        predicted_energy_j=e_exp,
+                        pareto_fallback=True,
+                    )
+        return None  # defer: replanned in the next round's batch
+
+    # -- execution + sensing ----------------------------------------------
+
+    def _node_by_name(self, name: str) -> FleetNode:
+        for node in self.pool:
+            if node.name == name:
+                return node
+        raise KeyError(name)
+
+    def _launch(self, placement: Placement) -> None:
+        job = placement.job
+        node = self._node_by_name(placement.node)
+        result = node.run_fixed(
+            job.app, placement.frequency_ghz, placement.cores, job.input_size
+        )
+        finish = placement.start_s + result.time_s
+        node.reserve(placement.start_s, finish, placement.cores, job.job_id)
+        self._finish_queue.append(
+            CompletedJob(
+                placement=placement,
+                result=result,
+                finish_s=finish,
+                met_deadline=finish <= job.deadline_s + 1e-9,
+            )
+        )
+
+    def _ingest(self, now: float) -> None:
+        """Stream finished runs (finish time <= now) into telemetry."""
+        due = [c for c in self._finish_queue if c.finish_s <= now + 1e-9]
+        due_ids = {id(c) for c in due}
+        self._finish_queue = [
+            c for c in self._finish_queue if id(c) not in due_ids
+        ]
+        due.sort(key=lambda c: (c.finish_s, c.placement.job.job_id))
+        for c in due:
+            p = c.placement
+            self.telemetry.record(
+                Observation(
+                    family=(p.job.app, p.job.input_size),
+                    node=p.node,
+                    frequency_ghz=p.frequency_ghz,
+                    cores=p.cores,
+                    input_size=p.job.input_size,
+                    predicted_time_s=p.predicted_time_s,
+                    measured_time_s=c.result.time_s,
+                    predicted_energy_j=p.predicted_energy_j,
+                    measured_energy_j=c.result.energy_j,
+                    finish_s=c.finish_s,
+                )
+            )
+            self.completed.append(c)
+
+    # -- online re-characterization ----------------------------------------
+
+    def _epoch_observations(self, family: Family) -> List:
+        """Only observations from the CURRENT refresh epoch: ratios must be
+        measured against the belief that produced their predictions, or
+        compounding onto ``time_scale`` double-counts drift learned by an
+        earlier refresh (and pre-refresh anchors drag the surface back)."""
+        return self.telemetry.family_observations(
+            family, since_s=self.telemetry.last_refresh_s(family)
+        )
+
+    def _drift_scale(self, family: Family, old_terms) -> float:
+        """Telemetry-estimated truth/believed time ratio for one family,
+        compounded onto whatever earlier refreshes already learned."""
+        window = self._epoch_observations(family)
+        window = window[-self.telemetry.detector.window:]
+        ratios = [
+            o.measured_time_s / max(o.predicted_time_s, 1e-12) for o in window
+        ]
+        if not ratios:  # defensive: a stale flag implies epoch observations
+            return old_terms.time_scale
+        return old_terms.time_scale * float(np.mean(ratios))
+
+    def _refit_set(self, terms: AppTerms, family: Family):
+        """Training set for one refreshed family: the believed surface
+        rescaled by the telemetry-estimated drift on the (char_freqs ×
+        char_cores) grid, anchored by the family's recent real observations
+        mapped back to reference scale. No new measurement runs — the
+        refit is paid for by joules the fleet already burned (a dedicated
+        re-characterization sweep would cost unaccounted energy and skew
+        the governor comparison)."""
+        feats, times = [], []
+        for f in self.char_freqs:
+            for c in self.char_cores:
+                feats.append((float(f), float(c)))
+                times.append(max(terms.step_time(float(f), int(c)), TIME_FLOOR))
+        for o in self._epoch_observations(family):
+            spec = self._node_by_name(o.node).spec
+            feats.append((o.frequency_ghz, float(o.cores)))
+            times.append(max(o.measured_time_s / spec.speed_skew, TIME_FLOOR))
+        return np.asarray(feats, np.float32), np.asarray(times, np.float32)
+
+    def _refresh_stale(self, now: float) -> List[Family]:
+        """Refresh every drift-flagged family in ONE ``svr.fit_many`` batch
+        and install the refreshed models into the engine cache."""
+        stale = self.telemetry.stale_families()
+        if not stale:
+            return []
+        keys = [family_key(app, n) for app, n in stale]
+        new_terms = []
+        for fam, key in zip(stale, keys):
+            old = self.engine.cached_terms(key) or key
+            new_terms.append(
+                AppTerms(
+                    app=fam[0],
+                    input_size=fam[1],
+                    time_scale=self._drift_scale(fam, old),
+                    source="telemetry",
+                )
+            )
+        sets = [self._refit_set(t, fam) for t, fam in zip(new_terms, stale)]
+        models = svr_mod.fit_many(sets, **ENGINE_FIT_KW)  # ONE batch
+        preds = svr_mod.predict_each(models, [x for x, _ in sets])
+        for fam, key, terms, model, (x, y), pred in zip(
+            stale, keys, new_terms, models, sets, preds
+        ):
+            self.engine.install_fit(
+                key, model, svr_mod.pae_from_pred(pred, y), terms
+            )
+            self.telemetry.mark_refreshed(fam, now)
+        return stale
+
+    # -- the simulation driver ---------------------------------------------
+
+    def run(
+        self,
+        jobs: Sequence[Job],
+        *,
+        drift_events: Sequence[Tuple[float, str, float]] = (),
+        max_rounds: int = 10_000,
+    ) -> List[CompletedJob]:
+        """Simulate the whole trace: rounds fire at job arrivals, job
+        completions and drift-event times until the queue drains.
+
+        ``drift_events`` are (sim time, app, time factor) truth shifts
+        applied fleet-wide — the scheduler is not told; telemetry notices.
+        """
+        self._pending = sorted(jobs, key=lambda j: (j.arrival_s, j.job_id))
+        events = sorted(drift_events)
+        ei = 0
+        now = 0.0
+        for _ in range(max_rounds):
+            if not (self._pending or self._finish_queue):
+                break
+            ei = apply_due_events(self.pool, events, ei, now)
+            self.step(now)
+            nxt = next_event_time(self.pool, self._pending, events, ei, now)
+            if nxt is None:
+                break  # unplaceable remainder: nothing left to wait for
+            now = nxt
+        self._ingest(float("inf"))
+        return self.completed
+
+    # -- summary -----------------------------------------------------------
+
+    @property
+    def makespan_s(self) -> float:
+        return max((c.finish_s for c in self.completed), default=0.0)
+
+    def total_energy_j(self) -> float:
+        return float(sum(c.result.energy_j for c in self.completed))
+
+    def deadline_misses(self) -> int:
+        return sum(not c.met_deadline for c in self.completed)
+
+    def utilization(self) -> Dict[str, float]:
+        return self.pool.utilization(self.makespan_s)

@@ -1,0 +1,125 @@
+"""Fleet telemetry: measured runs stream back, drift gets caught.
+
+The closed loop's sensing half. Every completed job yields an
+``Observation`` — the plan's node-projected predictions next to the
+measured ``RunResult``. A per-family sliding window of relative time-model
+errors feeds the ``DriftDetector``: when the windowed mean error of a
+family crosses the threshold, the family is *stale* and the scheduler's
+next round refreshes it (one ``svr.fit_many`` batch over ALL stale
+families — see ``scheduler.FleetScheduler._refresh_stale``). After a
+refresh the family's window is cleared so one drift event triggers one
+re-characterization, not one per subsequent round.
+
+Relative (not absolute) error is the right signal here: the node model's
+multiplicative skews and measurement noise are both proportional effects,
+so a family that drifted 1.5× slower shows a ~0.5 windowed relative error
+regardless of whether the job ran 30 s or 3000 s.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Tuple
+
+Family = Tuple[str, float]  # (app, input_size): one characterization family
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """One completed job: plan-projected prediction vs measurement."""
+
+    family: Family
+    node: str
+    frequency_ghz: float
+    cores: int
+    input_size: float
+    predicted_time_s: float
+    measured_time_s: float
+    predicted_energy_j: float
+    measured_energy_j: float
+    finish_s: float
+
+    @property
+    def rel_time_error(self) -> float:
+        return abs(self.measured_time_s - self.predicted_time_s) / max(
+            self.predicted_time_s, 1e-12
+        )
+
+
+class DriftDetector:
+    """Sliding-window relative-error watchdog, one window per family."""
+
+    def __init__(
+        self, window: int = 4, threshold: float = 0.15, min_samples: int = 2
+    ):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self.threshold = threshold
+        self.min_samples = min(min_samples, window)
+        self._errors: Dict[Family, Deque[float]] = {}
+
+    def record(self, family: Family, rel_error: float) -> None:
+        self._errors.setdefault(
+            family, collections.deque(maxlen=self.window)
+        ).append(float(rel_error))
+
+    def mean_error(self, family: Family) -> float:
+        errs = self._errors.get(family)
+        return sum(errs) / len(errs) if errs else 0.0
+
+    def stale(self) -> List[Family]:
+        """Families whose windowed mean error crossed the threshold, in a
+        deterministic (sorted) order — the refit batch is reproducible."""
+        return sorted(
+            fam
+            for fam, errs in self._errors.items()
+            if len(errs) >= self.min_samples
+            and sum(errs) / len(errs) > self.threshold
+        )
+
+    def reset(self, family: Family) -> None:
+        self._errors.pop(family, None)
+
+
+class TelemetryHub:
+    """The fleet's observation log + drift watchdog, one per scheduler."""
+
+    def __init__(
+        self, window: int = 4, threshold: float = 0.15, min_samples: int = 2
+    ):
+        self.observations: List[Observation] = []
+        self.detector = DriftDetector(
+            window=window, threshold=threshold, min_samples=min_samples
+        )
+        self.refreshes: List[Tuple[float, Family]] = []  # (sim time, family)
+
+    def record(self, obs: Observation) -> None:
+        self.observations.append(obs)
+        self.detector.record(obs.family, obs.rel_time_error)
+
+    def stale_families(self) -> List[Family]:
+        return self.detector.stale()
+
+    def mark_refreshed(self, family: Family, now: float) -> None:
+        self.detector.reset(family)
+        self.refreshes.append((now, family))
+
+    def last_refresh_s(self, family: Family) -> float:
+        """Sim time of the family's most recent refresh (-inf if never)."""
+        times = [t for t, fam in self.refreshes if fam == family]
+        return max(times) if times else float("-inf")
+
+    def family_observations(
+        self, family: Family, *, since_s: float = float("-inf")
+    ) -> List[Observation]:
+        return [
+            o
+            for o in self.observations
+            if o.family == family and o.finish_s > since_s
+        ]
+
+    @property
+    def n_recharacterizations(self) -> int:
+        return len(self.refreshes)

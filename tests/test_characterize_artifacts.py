@@ -1,0 +1,104 @@
+"""Edge cases of the dry-run artifact intake (`characterize.terms_from_artifacts`
+/ `workloads_from_artifacts`): empty/missing record sets, duplicate family
+keys across meshes, and records with missing optional fields."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import characterize
+from repro.core.engine import PlanningEngine, RooflineTerms, Workload
+from repro.core.tpu_power import PEAK_FLOPS_BF16
+
+
+def _write(dirpath, fname, rec):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, fname), "w") as f:
+        json.dump(rec, f)
+
+
+def _ok_record(flops=1e15, mem=1e12, coll=2e11):
+    return {
+        "ok": True,
+        "hlo": {
+            "flops_per_device": flops,
+            "memory_bytes_per_device": mem,
+            "collective_bytes_per_device": coll,
+        },
+    }
+
+
+def test_empty_record_list(tmp_path):
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    assert characterize.terms_from_artifacts(empty) == {}
+    assert characterize.workloads_from_artifacts(empty) == []
+
+
+def test_missing_directory_is_empty_not_an_error(tmp_path):
+    missing = str(tmp_path / "never-created")
+    assert characterize.terms_from_artifacts(missing) == {}
+    assert characterize.workloads_from_artifacts(missing) == []
+
+
+def test_duplicate_family_keys_across_meshes_collapse(tmp_path):
+    d = str(tmp_path)
+    # the same (arch, shape) family dry-run on two meshes: only the
+    # requested mesh contributes, so the family appears exactly once
+    _write(d, "archa__train_4k__pod.json", _ok_record(flops=1e15))
+    _write(d, "archa__train_4k__dcn.json", _ok_record(flops=9e15))
+    terms = characterize.terms_from_artifacts(d, mesh="pod")
+    assert list(terms) == [("archa", "train_4k")]
+    assert terms[("archa", "train_4k")].compute_s == pytest.approx(
+        1e15 / PEAK_FLOPS_BF16
+    )
+    workloads = characterize.workloads_from_artifacts(d, mesh="pod")
+    assert len(workloads) == 1
+    # intake is deterministic: a second scan yields the same families
+    assert [w.key for w in characterize.workloads_from_artifacts(d, mesh="pod")] == [
+        w.key for w in workloads
+    ]
+
+
+def test_failed_and_malformed_names_are_skipped(tmp_path):
+    d = str(tmp_path)
+    _write(d, "archa__train_4k__pod.json", {"ok": False})  # failed dry-run
+    _write(d, "not-an-artifact.json", _ok_record())  # name doesn't parse
+    _write(d, "archb__train_4k__pod.json", _ok_record())
+    assert list(characterize.terms_from_artifacts(d)) == [("archb", "train_4k")]
+
+
+def test_records_missing_optional_fields(tmp_path):
+    d = str(tmp_path)
+    # single-device record: no collectives section at all
+    _write(
+        d,
+        "archa__train_4k__pod.json",
+        {"ok": True, "hlo": {"flops_per_device": 1e15}},
+    )
+    # degenerate record: ok but no hlo payload
+    _write(d, "archb__train_4k__pod.json", {"ok": True})
+    terms = characterize.terms_from_artifacts(d)
+    a = terms[("archa", "train_4k")]
+    assert a.compute_s == pytest.approx(1e15 / PEAK_FLOPS_BF16)
+    assert a.memory_s == 0.0 and a.collective_s == 0.0
+    b = terms[("archb", "train_4k")]
+    assert (b.compute_s, b.memory_s, b.collective_s) == (0.0, 0.0, 0.0)
+    assert b.source == "dryrun"
+
+
+def test_workloads_keep_unknown_shape_labels_and_plan(tmp_path, fleet_pm):
+    d = str(tmp_path)
+    _write(d, "archa__train_4k__pod.json", _ok_record())
+    _write(d, "archa__exotic_shape__pod.json", _ok_record(flops=3e15))
+    workloads = characterize.workloads_from_artifacts(d)
+    names = sorted(w.cell.name for w in workloads)
+    assert names == ["exotic_shape", "train_4k"]  # stale labels survive
+    assert all(isinstance(w, Workload) for w in workloads)
+    assert all(isinstance(w.terms, RooflineTerms) for w in workloads)
+    # same arch, different shapes: two distinct engine families
+    assert len({w.key for w in workloads}) == 2
+    engine = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    plans = engine.plan_many(workloads)
+    assert len(plans) == 2 and all(p.terms_source == "dryrun" for p in plans)

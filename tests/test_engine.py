@@ -384,3 +384,44 @@ def test_engine_pareto(engine):
     # the energy-optimal plan is the frontier's cheapest point
     plan = engine.plan(w)
     assert plan.energy_per_step_j == pytest.approx(energies[-1], rel=1e-6)
+
+
+def test_pareto_frontier_deterministic_with_ties():
+    """The ordering contract the fleet scheduler's deadline fallback relies
+    on: sort by time, tie-break on energy then flat index; output strictly
+    increasing in time and strictly decreasing in energy; inf points (masked
+    grid entries) never appear."""
+    T = np.array([3.0, 1.0, 2.0, 1.0, 2.0, 5.0, 0.5])
+    E = np.array([9.0, 5.0, 4.0, 6.0, 4.0, 1.0, np.inf])
+    idxs = pareto_frontier(T, E)
+    # (1.0, 5.0) then (2.0, 4.0) [index 2 beats equal index 4] then (5.0, 1.0)
+    assert idxs == [(1,), (2,), (5,)]
+    times = [float(T[i]) for i in idxs]
+    energies = [float(E[i]) for i in idxs]
+    assert times == sorted(times) and len(set(times)) == len(times)
+    assert energies == sorted(energies, reverse=True)
+    assert len(set(energies)) == len(energies)
+    # repeated calls are bit-identical (pinning determinism)
+    assert pareto_frontier(T, E) == idxs
+
+
+def test_clear_cache_clears_analytic_terms_memo(fleet_pm):
+    """Regression: clear_cache() used to leave the module-level
+    terms_analytic (arch_id, cell) memo behind, so a mutated cell definition
+    re-registered under the same arch_id kept serving stale terms."""
+    from repro.configs.base import ShapeCell
+    from repro.core import engine as engine_mod
+
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    cell = ShapeCell("tmp_clear_cache_cell", 128, 2, "train")
+    t1 = engine_mod.terms_analytic("not-a-registered-arch", cell)
+    assert ("not-a-registered-arch", cell) in engine_mod._ANALYTIC_TERMS_CACHE
+    eng.plan(Workload("synthetic", SHAPES["train_4k"], terms=TERMS_A))
+    assert eng._fits
+    eng.clear_cache()
+    assert eng._fits == {}
+    assert engine_mod._ANALYTIC_TERMS_CACHE == {}
+    # the memo re-populates transparently after the clear
+    t2 = engine_mod.terms_analytic("not-a-registered-arch", cell)
+    assert t2 == t1
+    assert ("not-a-registered-arch", cell) in engine_mod._ANALYTIC_TERMS_CACHE

@@ -179,3 +179,19 @@ def test_terms_from_artifacts_missing_dir():
     from repro.core import characterize
 
     assert characterize.terms_from_artifacts("/nonexistent/dir") == {}
+
+
+def test_comparison_report_json_roundtrip(quick_report):
+    """to_json -> (real JSON) -> from_json is lossless: fleet and node
+    reports share this one serialization path."""
+    import json
+
+    payload = json.loads(json.dumps(quick_report.to_json()))
+    back = evaluate.ComparisonReport.from_json(payload)
+    assert back.plans == quick_report.plans
+    assert back.runs == quick_report.runs
+    assert back.objective == quick_report.objective
+    assert back.to_json() == json.loads(json.dumps(quick_report.to_json()))
+    # derived summaries recompute identically from the loaded records
+    assert back.worst_case_ratio == pytest.approx(quick_report.worst_case_ratio)
+    assert back.ratios_by_governor() == quick_report.ratios_by_governor()

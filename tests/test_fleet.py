@@ -1,0 +1,350 @@
+"""Fleet subsystem: heterogeneous pool, batched scheduling rounds, drift
+telemetry + online re-characterization, governor-fleet comparison.
+
+The two load-bearing invariants (ISSUE acceptance):
+  * each scheduling round issues exactly ONE ``PlanningEngine.plan_many``
+    call covering every pending job;
+  * re-characterization refreshes ONLY drift-flagged families, all of them
+    through ONE ``svr.fit_many`` batch.
+"""
+
+import pytest
+
+from repro.core import svr as svr_mod
+from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
+from repro.fleet import (
+    AppTerms,
+    FleetNode,
+    FleetScheduler,
+    Job,
+    NodePool,
+    NodeSpec,
+    family_key,
+    fleet_engine,
+    make_pool,
+)
+from repro.fleet.report import FleetReport, run_fleet_comparison
+from repro.fleet.telemetry import DriftDetector, Observation
+
+QUICK_FREQS = tuple(float(f) for f in FREQ_GRID[::3])
+QUICK_CORES = (1, 2, 4, 8, 16, 24, 32)
+QUICK_ENGINE_KW = dict(freqs=QUICK_FREQS, cores=QUICK_CORES, noise=0.01, seed=0)
+
+
+def quick_scheduler(pool=None, **kw):
+    pool = pool if pool is not None else make_pool(4, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    return FleetScheduler(
+        pool,
+        engine,
+        char_freqs=QUICK_FREQS[::2],
+        char_cores=(1, 8, 16, 32),
+        **kw,
+    )
+
+
+def trace(n_jobs, *, spacing=150.0, slack=3.0, inputs=(1.0,)):
+    apps = sorted(PROFILES)
+    jobs = []
+    t = 0.0
+    for i in range(n_jobs):
+        app = apps[i % len(apps)]
+        n = inputs[i % len(inputs)]
+        est = PROFILES[app].time(F_MAX, 16, n)
+        jobs.append(Job(i, app, n, deadline_s=t + est * slack, arrival_s=t))
+        t += spacing
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# cluster: specs, skews, drift, reservations
+# ---------------------------------------------------------------------------
+
+
+def test_node_spec_snap_and_projection():
+    spec = NodeSpec("n", freq_table=(1.2, 1.6, 2.0), static_power_skew=1.2,
+                    dynamic_power_skew=0.9, speed_skew=1.3)
+    assert spec.snap_frequency(1.4) == 1.6  # lowest table entry >= f
+    assert spec.snap_frequency(1.6) == 1.6
+    assert spec.snap_frequency(2.5) == 2.0  # above the table: clamp to max
+    assert spec.expected_time(10.0) == pytest.approx(13.0)
+    c1, c2, c3, c4 = spec.truth_coeffs((1.0, 1.0, 100.0, 10.0))
+    assert (c1, c2) == (0.9, 0.9) and (c3, c4) == (120.0, 12.0)
+    # expected_energy is expected_power × expected_time (the bin-pack score)
+    from repro.core.power import PowerModel
+
+    pm = PowerModel(0.29, 0.97, 198.59, 9.18)
+    e = spec.expected_energy(pm, 2.0, 8, 10.0)
+    assert e == pytest.approx(spec.expected_power(pm, 2.0, 8) * 13.0)
+
+
+def test_fleet_node_drift_scales_runtime_and_energy():
+    spec = NodeSpec("n")
+    plain = FleetNode(spec, seed=5)
+    drifted = FleetNode(spec, seed=5)
+    drifted.apply_drift("raytrace", 1.5)
+    r0 = plain.run_fixed("raytrace", 2.0, 8, 1.0)
+    r1 = drifted.run_fixed("raytrace", 2.0, 8, 1.0)
+    assert r1.time_s == pytest.approx(1.5 * r0.time_s)
+    assert r1.energy_j == pytest.approx(1.5 * r0.energy_j)
+    # drift is per-family: other apps are untouched
+    assert drifted.time_scale("swaptions") == 1.0
+    assert drifted.time_scale("raytrace") == pytest.approx(1.5)
+
+
+def test_reservation_accounting_and_utilization():
+    node = FleetNode(NodeSpec("n", max_cores=32))
+    assert node.free_cores(0.0) == 32
+    node.reserve(0.0, 100.0, 20, job_id=1)
+    node.reserve(0.0, 50.0, 8, job_id=2)
+    assert node.free_cores(10.0) == 4
+    assert node.free_cores(60.0) == 12  # job 2 finished
+    assert node.free_cores(200.0) == 32
+    # busy core-seconds: 20*100 + 8*50 over 32*100 capacity
+    assert node.utilization(100.0) == pytest.approx((2000 + 400) / 3200)
+    pool = NodePool([node])
+    assert pool.max_free_cores(10.0) == 4
+    assert pool.next_completion(10.0) == pytest.approx(50.0)
+    assert pool.next_completion(150.0) is None
+
+
+def test_app_terms_is_the_family_key():
+    a = family_key("raytrace", 2.0)
+    b = family_key("raytrace", 2.0)
+    c = family_key("raytrace", 3.0)
+    assert a == b and hash(a) == hash(b) and a != c
+    assert a.step_time(2.0, 8) == pytest.approx(
+        PROFILES["raytrace"].time(2.0, 8, 2.0)
+    )
+    scaled = AppTerms("raytrace", 2.0, time_scale=1.6)
+    assert scaled.step_time(2.0, 8) == pytest.approx(1.6 * a.step_time(2.0, 8))
+
+
+def test_family_sharing_one_fit_for_many_jobs():
+    pool = make_pool(2, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    sched = FleetScheduler(pool, engine)
+    jobs = [
+        Job(i, "blackscholes", 1.0, deadline_s=5000.0, arrival_s=0.0)
+        for i in range(4)
+    ]
+    sched.run(jobs)
+    assert len(engine._fits) == 1  # four jobs, one family, one SVR fit
+
+
+# ---------------------------------------------------------------------------
+# the scheduling-round invariants
+# ---------------------------------------------------------------------------
+
+
+def test_exactly_one_plan_many_per_round():
+    sched = quick_scheduler()
+    batches = []
+    orig = sched.engine.plan_many
+
+    def counting_plan_many(workloads):
+        workloads = list(workloads)
+        batches.append(len(workloads))
+        return orig(workloads)
+
+    sched.engine.plan_many = counting_plan_many
+    sched.run(trace(6, spacing=120.0))
+    planned_rounds = [r for r in sched.rounds if r.planned]
+    assert len(batches) == len(planned_rounds)  # ONE call per planning round
+    # ... and each call covered every job pending in that round
+    assert batches == [r.n_pending for r in planned_rounds]
+    assert len(sched.completed) == 6
+
+
+def test_refresh_stale_refits_only_flagged_families_in_one_batch(monkeypatch):
+    sched = quick_scheduler()
+    eng = sched.engine
+    fam_drift = ("raytrace", 1.0)
+    fam_ok = ("swaptions", 1.0)
+
+    def obs(fam, err):
+        t = 100.0
+        return Observation(
+            family=fam, node="ref-0", frequency_ghz=2.0, cores=8,
+            input_size=fam[1], predicted_time_s=100.0,
+            measured_time_s=100.0 * (1 + err), predicted_energy_j=1e4,
+            measured_energy_j=1e4 * (1 + err), finish_s=t,
+        )
+
+    for _ in range(3):
+        sched.telemetry.record(obs(fam_drift, 0.5))
+        sched.telemetry.record(obs(fam_ok, 0.01))
+    assert sched.telemetry.stale_families() == [fam_drift]
+
+    calls = []
+    orig_fit_many = svr_mod.fit_many
+
+    def counting_fit_many(sets, **kw):
+        calls.append(len(list(sets)))
+        return orig_fit_many(sets, **kw)
+
+    monkeypatch.setattr(svr_mod, "fit_many", counting_fit_many)
+    refit = sched._refresh_stale(now=200.0)
+    assert refit == [fam_drift]
+    assert calls == [1]  # ONE fit_many batch, exactly the stale families
+    key = family_key(*fam_drift)
+    assert key in eng._fits
+    assert eng._fits[key].terms.source == "telemetry"
+    # the refreshed believed surface carries the observed 1.5x drift
+    assert eng._fits[key].terms.time_scale == pytest.approx(1.5, rel=0.01)
+    assert family_key(*fam_ok) not in eng._fits  # untouched family not refit
+    # window cleared: the same drift does not retrigger next round
+    assert sched.telemetry.stale_families() == []
+    assert sched.telemetry.n_recharacterizations == 1
+
+
+def test_drift_triggers_recharacterization_end_to_end():
+    sched = quick_scheduler()
+    jobs = trace(10, spacing=140.0, slack=4.0)
+    sched.run(jobs, drift_events=[(300.0, "raytrace", 1.7)])
+    assert len(sched.completed) == 10
+    assert sched.telemetry.n_recharacterizations >= 1
+    refit_fams = {f for r in sched.rounds for f in r.refit_families}
+    assert refit_fams  # at least one refresh happened...
+    assert all(f[0] == "raytrace" for f in refit_fams)  # ...only the drifted app
+    # the installed model carries the measured drift scale
+    key = family_key("raytrace", 1.0)
+    terms = sched.engine._fits[key].terms
+    assert terms.source == "telemetry"
+    assert terms.time_scale > 1.3  # learned ~1.7x slowdown
+
+
+def test_pareto_fallback_buys_deadline_feasibility():
+    specs = [NodeSpec("ref-0"), NodeSpec("slow-1", speed_skew=1.35)]
+    pool = NodePool([FleetNode(s, seed=11 * i) for i, s in enumerate(specs)])
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    sched = FleetScheduler(pool, engine)
+    jobs = [
+        # hogs the reference node's cores when the tight job arrives
+        Job(0, "fluidanimate", 3.0, deadline_s=9000.0, arrival_s=0.0),
+        # energy optimum (~8 cores) projected onto slow-1 misses this
+        # deadline; a faster frontier point makes it
+        Job(1, "raytrace", 1.0, deadline_s=1300.0, arrival_s=100.0),
+    ]
+    completed = {c.placement.job.job_id: c for c in sched.run(jobs)}
+    tight = completed[1]
+    assert tight.placement.pareto_fallback
+    assert tight.met_deadline
+    assert tight.placement.node == "slow-1"
+
+
+def test_unplaceable_jobs_defer_to_a_later_round():
+    pool = NodePool([FleetNode(NodeSpec("only", max_cores=8), seed=0)])
+    engine = fleet_engine(pool, freqs=QUICK_FREQS, cores=(1, 2, 4, 8),
+                          noise=0.01, seed=0)
+    sched = FleetScheduler(pool, engine)
+    jobs = [
+        Job(0, "blackscholes", 2.0, deadline_s=4000.0, arrival_s=0.0),
+        Job(1, "blackscholes", 2.0, deadline_s=4000.0, arrival_s=0.0),
+    ]
+    completed = sched.run(jobs)
+    assert len(completed) == 2
+    # blackscholes races to idle: both jobs want all 8 cores, so the first
+    # round places one and defers the other until the node frees up
+    assert all(c.placement.cores == 8 for c in completed)
+    first = sched.rounds[0]
+    assert first.n_pending == 2 and first.n_placed == 1
+    starts = sorted(c.placement.start_s for c in completed)
+    assert starts[1] > starts[0]
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_drift_detector_window_and_reset():
+    det = DriftDetector(window=3, threshold=0.2, min_samples=2)
+    fam = ("app", 1.0)
+    det.record(fam, 0.5)
+    assert det.stale() == []  # below min_samples
+    det.record(fam, 0.5)
+    assert det.stale() == [fam]
+    det.reset(fam)
+    assert det.stale() == []
+    # sliding window: old spikes age out
+    for err in (0.9, 0.01, 0.01, 0.01):
+        det.record(fam, err)
+    assert det.stale() == []
+
+
+def test_observation_relative_error():
+    o = Observation(
+        family=("a", 1.0), node="n", frequency_ghz=2.0, cores=4,
+        input_size=1.0, predicted_time_s=100.0, measured_time_s=150.0,
+        predicted_energy_j=1.0, measured_energy_j=1.0, finish_s=0.0,
+    )
+    assert o.rel_time_error == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# the fleet comparison report
+# ---------------------------------------------------------------------------
+
+
+# The full comparison runs every governor over the whole trace — the
+# priciest fixture in the module, so the trio below rides the slow lane
+# (the invariant tests above keep the fast loop honest).
+@pytest.fixture(scope="module")
+def fleet_quick_report():
+    jobs = trace(8, spacing=160.0, slack=3.5)
+    report, sched = run_fleet_comparison(
+        jobs,
+        n_nodes=4,
+        seed=0,
+        drift_events=[(300.0, "raytrace", 1.6)],
+        engine_kw=QUICK_ENGINE_KW,
+        char_freqs=QUICK_FREQS[::2],
+        char_cores=(1, 8, 16, 32),
+    )
+    return report, sched
+
+
+@pytest.mark.slow
+def test_fleet_report_engine_beats_every_governor(fleet_quick_report):
+    report, sched = fleet_quick_report
+    assert set(report.scenarios) == {
+        "engine", "performance", "powersave", "ondemand", "conservative"
+    }
+    assert report.engine.n_jobs == 8
+    assert report.engine_beats_all(tol=0.05)
+    assert report.engine.recharacterizations >= 1
+    txt = report.table()
+    for name in report.scenarios:
+        assert name in txt
+
+
+@pytest.mark.slow
+def test_fleet_report_comparison_is_per_job(fleet_quick_report):
+    report, _ = fleet_quick_report
+    comp = report.comparison
+    assert len(comp.plans) == 8
+    assert len(comp.runs) == 8 * 4  # every job under every governor
+    for r in comp.runs:
+        gov_e = report.scenarios[r.governor].job_energy_j
+        eng_e = report.engine.job_energy_j
+        jid = [j for j, e in gov_e.items() if e == r.energy_j]
+        assert jid and r.ratio == pytest.approx(r.energy_j / eng_e[jid[0]])
+
+
+@pytest.mark.slow
+def test_fleet_report_json_roundtrip(fleet_quick_report):
+    import json
+
+    report, _ = fleet_quick_report
+    payload = json.loads(json.dumps(report.to_json(), default=float))
+    back = FleetReport.from_json(payload)
+    assert back.engine.total_energy_j == pytest.approx(
+        report.engine.total_energy_j
+    )
+    assert back.scenarios.keys() == report.scenarios.keys()
+    assert back.engine.job_energy_j == report.engine.job_energy_j  # int keys
+    assert back.comparison.worst_case_ratio == pytest.approx(
+        report.comparison.worst_case_ratio
+    )
+    assert back.to_json() == report.to_json()
