@@ -7,7 +7,9 @@ and 32 pending (app, input, deadline) jobs drawn from 8 workload families.
 The batched round pays one ``svr.fit_many`` for all cache-missing families
 and one grid prediction + objective tensor for all jobs; the sequential
 path re-characterizes per job. Acceptance: ≥3× on the 4-node / 32-job
-round, with identical chosen (f, p) configurations.
+round, with identical chosen (f, p) configurations — and the negotiation
+round's ``pareto_many`` (every job's frontier from the shared tensor)
+adds <10% to the batched round time, with per-job ``pareto`` parity.
 """
 
 from __future__ import annotations
@@ -74,12 +76,27 @@ def run():
     batch_cfg = [(p.frequency_ghz, p.chips) for p in batch_plans]
     assert seq_cfg == batch_cfg, "batched round diverges from sequential plans"
 
+    # the negotiation add-on: every pending job's frontier from the warm
+    # engine (fits + grid predictions cached by plan_many — exactly the
+    # scheduler's round shape). Acceptance: < 10% on top of the batched
+    # round.
+    frontiers, pareto_us = timed(batch_eng.pareto_many, workloads)
+    single = [batch_eng.pareto(w) for w in workloads]
+    assert frontiers == single, "pareto_many diverges from per-job pareto"
+    pareto_overhead = pareto_us / batch_us
+
     speedup = seq_us / batch_us
     emit(
         "fleet_round_plan_many",
         batch_us,
         f"nodes={N_NODES}_jobs={N_JOBS}_families={n_families}_"
         f"seq_us={seq_us:.0f}_speedup={speedup:.1f}x_parity=ok",
+    )
+    emit(
+        "fleet_round_pareto_many",
+        pareto_us,
+        f"jobs={N_JOBS}_overhead={100 * pareto_overhead:.1f}%_of_round_"
+        f"parity=ok",
     )
     save_json(
         "fleet",
@@ -90,6 +107,8 @@ def run():
             "sequential_us": seq_us,
             "batched_us": batch_us,
             "speedup": speedup,
+            "pareto_many_us": pareto_us,
+            "pareto_overhead_frac": pareto_overhead,
             "plans": [
                 {"app": p.arch, "f_ghz": p.frequency_ghz, "cores": p.chips,
                  "energy_j": p.energy_per_step_j}

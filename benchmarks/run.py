@@ -1,71 +1,117 @@
-"""Benchmark entry point: ``python -m benchmarks.run [--quick]``.
+"""Benchmark entry point: ``python -m benchmarks.run [--quick] [--only NAME]``.
 
 One section per paper table/figure (bench_paper_repro), plus the roofline
-table from the dry-run artifacts, the TPU planner (beyond-paper), and kernel
-micro-benches. Prints ``name,us_per_call,derived`` CSV lines.
+table from the dry-run artifacts, the TPU planner (beyond-paper), the
+batched engine / SVR-fit / fleet rounds, and kernel micro-benches. Prints
+``name,us_per_call,derived`` CSV lines; most sections also persist a JSON
+record under ``experiments/bench/`` (schema: ``docs/benchmarks.md``).
+
+Benchmarks self-register in ``BENCHES`` — the ``--only`` choices, the
+dispatch and the unknown-name error all derive from that one registry, so
+a new benchmark cannot be half-wired (listed but silently never run, or
+runnable but unlisted).
 """
 
 from __future__ import annotations
 
 import argparse
+from typing import Optional, Sequence
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def _run_kernels(quick: bool) -> None:
+    from benchmarks import bench_kernels
+
+    bench_kernels.run()
+
+
+def _run_paper(quick: bool) -> None:
+    from benchmarks import bench_paper_repro
+
+    bench_paper_repro.run(full=not quick)
+
+
+def _run_roofline(quick: bool) -> None:
+    from benchmarks import bench_roofline
+
+    bench_roofline.run()
+    # right-sizing study needs its own process (512 virtual devices)
+    import subprocess
+    import sys as _sys
+
+    proc = subprocess.run(
+        [_sys.executable, "-m", "benchmarks.bench_rightsize"],
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    print(proc.stdout, end="")
+
+
+def _run_planner(quick: bool) -> None:
+    from benchmarks import bench_tpu_planner
+
+    bench_tpu_planner.run()
+
+
+def _run_engine(quick: bool) -> None:
+    from benchmarks import bench_engine
+
+    bench_engine.run()
+
+
+def _run_svr_fit(quick: bool) -> None:
+    from benchmarks import bench_svr_fit
+
+    bench_svr_fit.run()
+
+
+def _run_fleet(quick: bool) -> None:
+    from benchmarks import bench_fleet
+
+    bench_fleet.run()
+
+
+# name -> runner; insertion order is execution order for a full run
+BENCHES = {
+    "kernels": _run_kernels,
+    "paper": _run_paper,
+    "roofline": _run_roofline,
+    "planner": _run_planner,
+    "engine": _run_engine,
+    "svr_fit": _run_svr_fit,
+    "fleet": _run_fleet,
+}
+
+
+def run_selected(only: Optional[str] = None, *, quick: bool = False) -> None:
+    """Run one benchmark (or all). Unknown names fail loudly with the
+    valid-name list — never a silent no-op run."""
+    if only is not None and only not in BENCHES:
+        raise SystemExit(
+            f"unknown benchmark {only!r}; valid names: {', '.join(BENCHES)}"
+        )
+    print("name,us_per_call,derived")
+    for name, runner in BENCHES.items():
+        if only in (None, name):
+            runner(quick)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
         "--quick", action="store_true", help="reduced characterization grids"
     )
+    # free-form on purpose: run_selected owns the validation so the error
+    # (with the valid-name list) is identical for CLI and programmatic use
     ap.add_argument(
         "--only",
-        choices=[
-            "paper", "roofline", "planner", "engine", "kernels", "svr_fit",
-            "fleet",
-        ],
+        metavar="NAME",
+        choices=None,
         default=None,
+        help=f"run one benchmark: {', '.join(BENCHES)}",
     )
-    args = ap.parse_args()
-
-    print("name,us_per_call,derived")
-
-    if args.only in (None, "kernels"):
-        from benchmarks import bench_kernels
-
-        bench_kernels.run()
-    if args.only in (None, "paper"):
-        from benchmarks import bench_paper_repro
-
-        bench_paper_repro.run(full=not args.quick)
-    if args.only in (None, "roofline"):
-        from benchmarks import bench_roofline
-
-        bench_roofline.run()
-        # right-sizing study needs its own process (512 virtual devices)
-        import subprocess
-        import sys as _sys
-
-        proc = subprocess.run(
-            [_sys.executable, "-m", "benchmarks.bench_rightsize"],
-            capture_output=True,
-            text=True,
-            timeout=1200,
-        )
-        print(proc.stdout, end="")
-    if args.only in (None, "planner"):
-        from benchmarks import bench_tpu_planner
-
-        bench_tpu_planner.run()
-    if args.only in (None, "engine"):
-        from benchmarks import bench_engine
-
-        bench_engine.run()
-    if args.only in (None, "svr_fit"):
-        from benchmarks import bench_svr_fit
-
-        bench_svr_fit.run()
-    if args.only in (None, "fleet"):
-        from benchmarks import bench_fleet
-
-        bench_fleet.run()
+    args = ap.parse_args(argv)
+    run_selected(args.only, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -82,7 +82,30 @@ ENGINE_FIT_KW = dict(gamma=0.5, standardize=True, log_target=True, eps=1e-4)
 
 @dataclasses.dataclass(frozen=True)
 class Constraints:
-    """Optional limits on the grid search (one class for every path)."""
+    """Optional limits on the (frequency × cores) grid search.
+
+    One class for every planning path — the node argmin, the TPU planner,
+    the fleet scheduler and the pareto frontier all mask the grid with the
+    same semantics (``constraint_mask``). ``None`` means unconstrained.
+
+    Fields (units):
+        max_time_s: upper bound on the *predicted* step/run time, in
+            seconds. The fleet scheduler passes deadline slack here.
+        max_cores: upper bound on the parallelism axis — cores on the node
+            grid, chips on the TPU grid (dimensionless count).
+        min_frequency_ghz / max_frequency_ghz: clock bounds in GHz,
+            inclusive.
+
+    Example — plan under a 600 s deadline on at most 16 cores::
+
+        from repro.core.engine import Constraints, Workload
+        w = Workload(arch="app", terms=my_terms,
+                     constraints=Constraints(max_time_s=600.0, max_cores=16))
+
+    An over-tight combination can mask out the whole grid; what happens
+    then is the entry point's ``on_infeasible`` choice (``"raise"`` or
+    ``"fastest"``).
+    """
 
     max_time_s: Optional[float] = None
     max_cores: Optional[int] = None  # cores on the node, chips on the fleet
@@ -159,17 +182,18 @@ def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
     e_flat = E.ravel()
     # lexsort: last key is primary -> time, then energy, then flat index.
     order = np.lexsort((np.arange(t_flat.size), e_flat, t_flat))
-    out: List[Tuple[int, ...]] = []
-    best_e = np.inf
-    for i in order:
-        t = float(t_flat[i])
-        e = float(e_flat[i])
-        if not (np.isfinite(t) and np.isfinite(e)):
-            continue
-        if e < best_e:
-            best_e = e
-            out.append(np.unravel_index(i, T.shape))
-    return out
+    # vectorized frontier sweep (the per-point Python loop dominated the
+    # batched pareto_many round): a sorted point is on the frontier iff it
+    # is finite and strictly cheaper than every finite point before it,
+    # i.e. than the running energy minimum.
+    e_sorted = e_flat[order]
+    finite = np.isfinite(t_flat[order]) & np.isfinite(e_sorted)
+    cummin = np.minimum.accumulate(np.where(finite, e_sorted, np.inf))
+    prev_best = np.concatenate(([np.inf], cummin[:-1]))
+    keep = finite & (e_sorted < prev_best)
+    return [
+        tuple(idx) for idx in zip(*np.unravel_index(order[keep], T.shape))
+    ]
 
 
 @jax.jit
@@ -424,6 +448,18 @@ class PlanningEngine:
         samples (one ``svr.fit_many`` batch for all stale families) and
         installs the fresh models here under the same ``Workload.key``.
         The grid prediction is recomputed lazily on the next plan.
+
+        Args:
+            key: the family's cache key — must equal the ``Workload.key``
+                future plans will present (for fleet jobs, the frozen
+                ``AppTerms``/``TermsFamily`` with ``time_scale == 1.0``).
+            model: a fitted ``svr.SVRParams`` step-time surface mapping
+                raw (GHz, cores) features to seconds.
+            pae: the model's percentage absolute error on its training
+                set (dimensionless, e.g. 0.03 = 3%).
+            terms: the believed roofline/terms object behind the fit;
+                ``cached_terms(key)`` returns it so the next refresh can
+                compound drift estimates instead of restarting from 1.0.
         """
         self._fits[key] = _Fit(model=model, pae=float(pae), terms=terms)
 
@@ -485,9 +521,6 @@ class PlanningEngine:
                 )
         return [self._fits[w.key] for w in workloads]
 
-    def _fit_for(self, w: Workload) -> _Fit:
-        return self._fits_for([w])[0]
-
     def _ensure_predictions(self, fits: Sequence[_Fit]) -> None:
         """Evaluate the step-time grid of every not-yet-predicted fit in one
         batched ``rbf_gram`` call (``svr.predict_many``)."""
@@ -507,8 +540,30 @@ class PlanningEngine:
     # -- planning -----------------------------------------------------------
 
     def plan_many(self, workloads: Sequence[Workload]) -> List[EnergyPlan]:
-        """Plan every workload: one SVR fit per unique family (cached across
-        calls), one batched grid prediction, one jitted objective tensor."""
+        """Plan every workload in one batched pass (paper Eq. 8, batched).
+
+        One ``svr.fit_many`` over the cache-missing families, one batched
+        grid prediction (``svr.predict_many``), one jitted (workload ×
+        frequency × cores) objective tensor, then a masked argmin per
+        workload under its own ``Constraints``/objective.
+
+        Args:
+            workloads: planning requests; workloads sharing a ``key``
+                (same family) share one cached SVR fit.
+
+        Returns:
+            ``EnergyPlan`` per workload, aligned with the input order.
+            Units: ``frequency_ghz`` GHz, ``step_time_s`` s, ``power_w``
+            W, ``energy_per_step_j``/``total_energy_j`` J.
+
+        Example::
+
+            from repro.core.engine import PlanningEngine, Workload
+            eng = PlanningEngine.default()
+            plans = eng.plan_many(
+                [Workload(arch="example_lm", terms=my_terms)])
+            print(plans[0].summary())
+        """
         workloads = list(workloads)
         if not workloads:
             return []
@@ -532,6 +587,9 @@ class PlanningEngine:
         ]
 
     def plan(self, workload: Workload) -> EnergyPlan:
+        """Plan one workload — the B = 1 view of ``plan_many`` (one code
+        path, so a single plan and a batched plan of the same workload are
+        identical). Returns an ``EnergyPlan`` (s, W, J units)."""
         return self.plan_many([workload])[0]
 
     def _plan_one(self, w: Workload, fit: _Fit, metric: np.ndarray) -> EnergyPlan:
@@ -574,19 +632,82 @@ class PlanningEngine:
             total_energy_j=watts * step_t * w.n_steps,
         )
 
-    def pareto(self, workload: Workload) -> List[ParetoPoint]:
-        """The workload's energy/time frontier, fastest point first.
+    def pareto_many(
+        self, workloads: Sequence[Workload]
+    ) -> List[List[ParetoPoint]]:
+        """The energy/time frontier of EVERY workload, one batched pass.
 
-        Honors the workload's constraints: only feasible grid points appear,
-        with the engine's usual empty-mask semantics."""
-        fit = self._fit_for(workload)
-        self._ensure_predictions([fit])
-        mask = constraint_mask(self._F, self._C, fit.T, workload.constraints)
+        The fleet negotiation hot path: each scheduling round needs the
+        deterministic frontier of every pending job, and fitting/predicting
+        them one ``pareto`` call at a time would re-pay the grid evaluation
+        per job. This reuses exactly the ``plan_many`` machinery — one
+        ``svr.fit_many`` over cache-missing families, one batched grid
+        prediction, and ONE jitted objective-tensor pass (``_objective_many``
+        with k = 0, i.e. the energy tensor E = W·T) — then extracts each
+        workload's frontier from its slice of the shared tensor. No per-job
+        re-trace, no per-job Gram build.
+
+        Args:
+            workloads: planning requests; each frontier honors ITS OWN
+                ``Constraints`` (masked-out grid points never appear), with
+                the engine's usual empty-mask ``on_infeasible`` semantics.
+
+        Returns:
+            One ``List[ParetoPoint]`` per workload, aligned with the input:
+            fastest point first, strictly increasing ``step_time_s`` (s) and
+            strictly decreasing ``energy_per_step_j`` (J) along the list —
+            the deterministic ordering contract of ``pareto_frontier``.
+            Because the per-point values are read from the same shared
+            tensor, ``pareto_many(ws)[i]`` is bitwise identical to
+            ``pareto(ws[i])``.
+
+        Example::
+
+            frontiers = engine.pareto_many(workloads)
+            cheapest = [fr[-1] for fr in frontiers]  # slowest/cheapest point
+        """
+        workloads = list(workloads)
+        if not workloads:
+            return []
+        fits = self._fits_for(workloads)
+        self._ensure_predictions(fits)
+        T_stack = jnp.asarray(np.stack([f.T for f in fits]), jnp.float32)
+        # E·T^0, i.e. the plain energy tensor. np.zeros, not jnp.zeros: the
+        # device zeros kernel would jit-compile once per batch size, turning
+        # the first frontier round of every new batch shape into a ~30 ms
+        # compile for a constant.
+        k = jnp.asarray(np.zeros(len(workloads), np.float32))
+        E_stack = np.asarray(
+            _objective_many(T_stack, jnp.asarray(self._W, jnp.float32), k),
+            np.float64,
+        )
+        return [
+            self._frontier_for(w, f, E_stack[i])
+            for i, (w, f) in enumerate(zip(workloads, fits))
+        ]
+
+    def pareto(self, workload: Workload) -> List[ParetoPoint]:
+        """One workload's energy/time frontier, fastest point first.
+
+        The B = 1 view of ``pareto_many`` (one code path — single and
+        batched frontiers are bitwise identical). Honors the workload's
+        constraints: only feasible grid points appear, with the engine's
+        usual empty-mask ``on_infeasible`` semantics. Each ``ParetoPoint``
+        carries GHz / s / W / J fields; successive points are slower but
+        strictly cheaper in energy — the list deadline negotiation trades
+        along."""
+        return self.pareto_many([workload])[0]
+
+    def _frontier_for(
+        self, w: Workload, fit: _Fit, E: np.ndarray
+    ) -> List[ParetoPoint]:
+        """Extract one workload's frontier from its slice of the shared
+        energy tensor (constraint mask + deterministic ``pareto_frontier``)."""
+        mask = constraint_mask(self._F, self._C, fit.T, w.constraints)
         if not mask.any():
             if self.on_infeasible == "raise":
                 raise ValueError("constraints admit no configuration on the grid")
             mask = fit.T <= np.min(fit.T) * (1.0 + 1e-3)
-        E = self._W * fit.T
         return [
             ParetoPoint(
                 frequency_ghz=float(self._F[idx]),

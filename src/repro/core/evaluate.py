@@ -89,17 +89,20 @@ class ComparisonReport:
     runs: List[GovernorRun]
     objective: str = "energy"
 
+    # summary ratios are NaN (not an error) on an empty run set: fleet
+    # reports over artifact traces have plans but no governor runs
     @property
     def worst_case_ratio(self) -> float:
-        return max(r.ratio for r in self.runs)
+        return max((r.ratio for r in self.runs), default=float("nan"))
 
     @property
     def best_case_ratio(self) -> float:
-        return min(r.ratio for r in self.runs)
+        return min((r.ratio for r in self.runs), default=float("nan"))
 
     @property
     def mean_ratio(self) -> float:
-        return float(np.mean([r.ratio for r in self.runs]))
+        ratios = [r.ratio for r in self.runs]
+        return float(np.mean(ratios)) if ratios else float("nan")
 
     def ratios_by_governor(self) -> Dict[str, Tuple[float, float, float]]:
         """{governor: (best, mean, worst) energy ratio vs the plan}."""

@@ -403,9 +403,33 @@ def fit_many(
         dropping out as they converge),
       * the optional ISTA polish (``iters > 0``) is one vmapped jitted pass.
 
-    Returns a list of ``SVRParams`` aligned with ``sets``. ``fit`` is the
-    B = 1 wrapper, so batched and sequential fits share one numerical path
-    (parity up to batched-LAPACK reduction order).
+    Args:
+        sets: B training sets. Per set: x (n, d) raw features — for the
+            paper's surfaces (frequency GHz, cores, input size) — and
+            y (n,) raw targets in seconds.
+        C / eps: the ε-SVR box bound and tube, in raw-target units
+            (seconds; rescaled internally when ``standardize``).
+        gamma: RBF width on the (possibly standardized) feature axes.
+        iters: ISTA polish iterations (0 = active-set solution only).
+        log_target / standardize: the beyond-paper mode for features
+            spanning orders of magnitude (the TPU planner / engine path).
+        ridge: base conditioning ridge for the KKT solves.
+
+    Returns:
+        ``List[SVRParams]`` aligned with ``sets``; ``predict(model, x)``
+        yields seconds. ``fit`` is the B = 1 wrapper, so batched and
+        sequential fits share one numerical path (parity up to
+        batched-LAPACK reduction order).
+
+    Example — two families, one batched solve::
+
+        import numpy as np
+        from repro.core import svr
+        x = np.array([[1.2, 4.0], [1.8, 8.0], [2.2, 16.0]], np.float32)
+        sets = [(x, np.array([4.0, 2.0, 1.0], np.float32)),
+                (x, np.array([8.0, 5.0, 3.0], np.float32))]
+        m_a, m_b = svr.fit_many(sets, gamma=0.5)
+        t_pred = svr.predict(m_a, x)  # seconds, aligned with x
     """
     pairs = [_as_xy(s) for s in sets]
     if not pairs:
@@ -547,7 +571,17 @@ def fit(
     standardize: bool = False,
     ridge: float = 1e-3,
 ) -> SVRParams:
-    """Fit ε-SVR. x: (n, d) raw features, y: (n,) raw targets.
+    """Fit one ε-SVR step-time surface (paper §2.2).
+
+    Args:
+        x: (n, d) raw features — the paper's axes are (frequency GHz,
+            active cores, input size).
+        y: (n,) raw targets — measured execution times in seconds.
+        C / gamma / eps: paper §3.4 hyper-parameters (defaults are the
+            paper's grid-searched values; C and ε in raw-target seconds).
+
+    Returns:
+        ``SVRParams``; ``predict(params, x)`` returns seconds.
 
     Defaults are paper-faithful: RAW features and targets with γ = 0.5 and
     C = 10·10³ (the paper's grid-searched values act on raw (f, p, N) axes —
@@ -558,7 +592,17 @@ def fit(
     span orders of magnitude.
 
     Thin B = 1 wrapper over ``fit_many`` — single and batched fits share one
-    numerical path (the ridge-escalated batched active-set solve)."""
+    numerical path (the ridge-escalated batched active-set solve).
+
+    Example::
+
+        import numpy as np
+        from repro.core import svr
+        x = np.array([[1.2, 4.0], [1.8, 8.0], [2.2, 16.0]], np.float32)
+        y = np.array([4.0, 2.0, 1.0], np.float32)  # seconds
+        model = svr.fit(x, y)
+        assert svr.pae(model, x, y) < 0.2
+    """
     return fit_many(
         [(x, y)],
         C=C,

@@ -3,11 +3,23 @@
 Builds a heterogeneous ≥4-node pool and a deterministic job trace
 (staggered arrivals, mixed applications/inputs, service-level deadlines),
 injects a mid-simulation drift event (one application family silently gets
-slower fleet-wide), and runs the trace under the engine scheduler and
-under every stock governor with naive FIFO placement. Prints the fleet
-report: joules, makespan and per-node utilization per scenario, per-job
-energy ratios, deadline misses, pareto deadline fallbacks and the number
-of drift-triggered re-characterizations.
+slower fleet-wide), and runs the trace under the engine scheduler — with
+fleet-wide pareto negotiation and preemptive rebalancing enabled by
+default — under the PR-3 cheapest-first fallback (the ``engine-fallback``
+row: same engine, no negotiation, no migration), and under every stock
+governor with naive FIFO placement. Prints the fleet report: joules,
+makespan and per-node utilization per scenario, per-job energy ratios,
+deadline misses, pareto fallbacks, negotiation exchanges, preemptive
+migrations (with their honest energy overhead) and the number of
+drift-triggered re-characterizations.
+
+``--artifacts DIR`` switches the intake: every ``launch/dryrun.py`` JSON
+record in DIR becomes one fleet job via
+``characterize.workloads_from_artifacts`` (the believed surface is the
+artifact's roofline terms wrapped in ``cluster.TermsFamily``), and the
+full intake → negotiate → migrate loop runs on those records. Stock
+governors need the node profile table, so the artifact comparison is
+engine vs engine-fallback.
 """
 
 from __future__ import annotations
@@ -18,9 +30,16 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.characterize import workloads_from_artifacts
 from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
-from repro.fleet.report import run_fleet_comparison
-from repro.fleet.scheduler import Job
+from repro.fleet.cluster import TermsFamily, make_pool
+from repro.fleet.report import (
+    build_comparison,
+    run_engine_fleet,
+    run_fleet_comparison,
+    FleetReport,
+)
+from repro.fleet.scheduler import Job, MigrationPolicy, fleet_engine
 
 DRIFT_APP = "raytrace"
 DRIFT_FACTOR = 1.6
@@ -63,6 +82,85 @@ def build_jobs(
     return jobs
 
 
+def build_artifact_jobs(
+    dryrun_dir: str,
+    *,
+    seed: int = 0,
+    arrival_spacing_s: float = 200.0,
+    slack_range=(1.4, 4.0),
+) -> List[Job]:
+    """Every dry-run artifact as one fleet job (the intake wiring).
+
+    ``workloads_from_artifacts`` supplies the engine ``Workload`` per
+    record; here each becomes a ``Job`` whose believed surface is the
+    artifact's roofline terms (``TermsFamily`` — frozen, so it doubles as
+    the engine's characterization cache key), with a seeded arrival and a
+    deadline slack off the optimistic 16-core/f_max service estimate.
+    """
+    workloads = workloads_from_artifacts(dryrun_dir)
+    rng = np.random.default_rng(seed)
+    jobs: List[Job] = []
+    t = 0.0
+    for i, w in enumerate(workloads):
+        terms = TermsFamily(base=w.terms, app=f"{w.arch}:{w.shape_name}")
+        est_fast = terms.step_time(F_MAX, 16)
+        slack = float(rng.uniform(*slack_range))
+        jobs.append(
+            Job(
+                job_id=i,
+                app=terms.app,
+                input_size=terms.input_size,
+                deadline_s=t + est_fast * slack,
+                arrival_s=t,
+                terms=terms,
+            )
+        )
+        t += float(rng.uniform(0.2, 1.0)) * arrival_spacing_s
+    return jobs
+
+
+def run_artifact_fleet(
+    jobs: Sequence[Job],
+    *,
+    n_nodes: int,
+    seed: int,
+    engine_kw: dict,
+    char_freqs,
+    char_cores,
+    drift_events,
+    migration: Optional[MigrationPolicy],
+    negotiate: bool,
+):
+    """Artifact traces: engine (negotiated) vs engine-fallback only —
+    stock governors cannot run apps outside the node profile table."""
+    pool = make_pool(n_nodes, seed=seed)
+    stats, sched = run_engine_fleet(
+        pool,
+        jobs,
+        drift_events=drift_events,
+        engine=fleet_engine(pool, **engine_kw),
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+        negotiate=negotiate,
+        migration=migration,
+    )
+    fpool = make_pool(n_nodes, seed=seed)
+    fb, _ = run_engine_fleet(
+        fpool,
+        jobs,
+        drift_events=drift_events,
+        engine=fleet_engine(fpool, **engine_kw),
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+        name="engine-fallback",
+    )
+    report = FleetReport(
+        scenarios={"engine": stats, "engine-fallback": fb},
+        comparison=build_comparison(stats, [], jobs, sched.completed),
+    )
+    return report, sched
+
+
 def main(argv: Optional[Sequence[str]] = None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true", help="reduced grids/trace")
@@ -70,6 +168,24 @@ def main(argv: Optional[Sequence[str]] = None):
     ap.add_argument("--nodes", type=int, default=4, help="pool size (>= 4)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", help="write the full report to this path")
+    ap.add_argument(
+        "--artifacts",
+        metavar="DIR",
+        help="build the job trace from launch/dryrun.py JSON records in DIR "
+        "(engine vs engine-fallback comparison; governors need profiles)",
+    )
+    ap.add_argument(
+        "--fallback",
+        action="store_true",
+        help="disable negotiation + migration (the PR-3 cheapest-first "
+        "scheduler) in the engine scenario",
+    )
+    ap.add_argument(
+        "--migration-cost-j",
+        type=float,
+        default=2_000.0,
+        help="joules charged per preemptive migration",
+    )
     args = ap.parse_args(argv)
 
     n_jobs = args.jobs or (12 if args.quick else 32)
@@ -89,34 +205,65 @@ def main(argv: Optional[Sequence[str]] = None):
         char_cores = None
         input_sizes = (1.0, 2.0, 3.0)
 
-    jobs = build_jobs(n_jobs, seed=args.seed, input_sizes=input_sizes)
-    # the drift event lands mid-trace: enough history before it to trust
-    # the model, enough jobs after it to notice and profit from the re-fit
-    drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
-    drift_events = [(drift_t, DRIFT_APP, DRIFT_FACTOR)]
-
-    report, sched = run_fleet_comparison(
-        jobs,
-        n_nodes=args.nodes,
-        seed=args.seed,
-        drift_events=drift_events,
-        engine_kw=engine_kw,
-        char_freqs=char_freqs,
-        char_cores=char_cores,
+    negotiate = not args.fallback
+    migration = (
+        None if args.fallback else MigrationPolicy(cost_j=args.migration_cost_j)
     )
+
+    if args.artifacts:
+        jobs = build_artifact_jobs(args.artifacts, seed=args.seed)
+        if not jobs:
+            ap.error(f"no usable dry-run artifacts under {args.artifacts!r}")
+        # drift the first artifact family mid-trace: the intake loop must
+        # exercise re-characterization and (policy permitting) migration
+        drift_app = jobs[0].app
+        drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+        drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
+        report, sched = run_artifact_fleet(
+            jobs,
+            n_nodes=args.nodes,
+            seed=args.seed,
+            engine_kw=engine_kw,
+            char_freqs=char_freqs,
+            char_cores=char_cores,
+            drift_events=drift_events,
+            migration=migration,
+            negotiate=negotiate,
+        )
+    else:
+        jobs = build_jobs(n_jobs, seed=args.seed, input_sizes=input_sizes)
+        drift_app = DRIFT_APP
+        # the drift event lands mid-trace: enough history before it to
+        # trust the model, enough jobs after it to notice and profit from
+        # the re-fit
+        drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+        drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
+        report, sched = run_fleet_comparison(
+            jobs,
+            n_nodes=args.nodes,
+            seed=args.seed,
+            drift_events=drift_events,
+            engine_kw=engine_kw,
+            char_freqs=char_freqs,
+            char_cores=char_cores,
+            negotiate=negotiate,
+            migration=migration,
+            include_fallback=not args.fallback,
+        )
 
     n_rounds = len(sched.rounds)
     n_planned = sum(r.planned for r in sched.rounds)
+    mode = "fallback" if args.fallback else "negotiate+migrate"
     print(
-        f"fleet: {args.nodes} nodes, {n_jobs} jobs, {n_rounds} rounds "
-        f"({n_planned} with planning), drift {DRIFT_APP}x{DRIFT_FACTOR} "
-        f"@t={drift_t:.0f}s"
+        f"fleet: {args.nodes} nodes, {len(jobs)} jobs, {n_rounds} rounds "
+        f"({n_planned} with planning, {mode}), drift {drift_app}"
+        f"x{DRIFT_FACTOR} @t={drift_t:.0f}s"
     )
     print(report.table())
     ok = report.engine_beats_all(tol=0.05)
     refits = report.engine.recharacterizations
     print(
-        f"engine <= every governor fleet (tol 5%): {ok}; "
+        f"engine <= every baseline fleet (tol 5%): {ok}; "
         f"drift-triggered re-characterizations: {refits}"
     )
     if args.json:

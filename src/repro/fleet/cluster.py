@@ -101,6 +101,37 @@ class NodeSpec:
         )
 
 
+def project_point(
+    spec: NodeSpec,
+    power_model: PowerModel,
+    terms,
+    cores: int,
+    f: float,
+    ref_time_s: float,
+) -> Tuple[float, float, float]:
+    """Project one reference-grid configuration onto one node.
+
+    The single projection used by the bin-pack candidates, the pareto
+    negotiation and the migration re-plan — one definition, or the three
+    would score the same (point, node) differently. A node whose frequency
+    table cannot reach the planned ``f`` (GHz) runs at its snapped (usually
+    lower) frequency; the believed surface ``terms`` supplies the time
+    ratio between the two, so the returned projection describes the run
+    the node will actually execute.
+
+    Returns ``(f_snap GHz, expected time s, expected energy J)`` — the
+    "plan energy × node skew" score.
+    """
+    f_snap = spec.snap_frequency(f)
+    t_ref = ref_time_s
+    if f_snap != f:
+        believed = terms.step_time(f, cores)
+        t_ref *= terms.step_time(f_snap, cores) / max(believed, 1e-12)
+    t_exp = spec.expected_time(t_ref)
+    e_exp = spec.expected_energy(power_model, f_snap, cores, t_ref)
+    return f_snap, t_exp, e_exp
+
+
 @dataclasses.dataclass
 class Reservation:
     start_s: float
@@ -136,7 +167,14 @@ class FleetNode:
 
     # -- measurement substrate --------------------------------------------
 
-    def _rescale(self, r: RunResult, scale: float) -> RunResult:
+    def rescale(self, r: RunResult, scale: float) -> RunResult:
+        """Scale a run's duration (power unchanged, energy follows).
+
+        Public contract: the node's hidden time effects (``run_fixed``,
+        ``run_governor``, ``run_terms``) and the scheduler's preemption
+        relaunch (the ``work_frac`` remainder of a preempted job) both
+        rescale measurements through here.
+        """
         t = r.time_s * scale
         return RunResult(
             time_s=t,
@@ -150,12 +188,41 @@ class FleetNode:
     def run_fixed(self, app: str, f: float, p: int, n: float) -> RunResult:
         f = self.spec.snap_frequency(f)
         p = min(int(p), self.spec.max_cores)
-        return self._rescale(self.node.run_fixed(app, f, p, n), self.time_scale(app))
+        return self.rescale(self.node.run_fixed(app, f, p, n), self.time_scale(app))
 
     def run_governor(self, app: str, governor, p: int, n: float) -> RunResult:
         p = min(int(p), self.spec.max_cores)
-        return self._rescale(
+        return self.rescale(
             self.node.run_governor(app, governor, p, n), self.time_scale(app)
+        )
+
+    def run_terms(self, app: str, terms, f: float, p: int) -> RunResult:
+        """Execute one terms-backed job (the dry-run artifact intake path).
+
+        Applications outside the node profile table have no work/span
+        ground truth to simulate, so the truth of a terms-backed run is the
+        believed base surface itself under this node's *hidden* effects:
+        speed skew × accumulated drift × measurement noise, with power
+        drawn from the node's skewed true coefficients. The scheduler still
+        plans on the un-skewed reference surface, so the model-vs-truth gap
+        telemetry watches is exactly the node heterogeneity + drift, as it
+        is for profiled apps.
+        """
+        f = self.spec.snap_frequency(f)
+        p = min(int(p), self.spec.max_cores)
+        t = terms.step_time(f, p) * self.time_scale(app)
+        t *= 1.0 + float(self.node.rng.normal(0.0, self.node.time_noise))
+        t = max(t, 1e-3)
+        # cap the 1 Hz IPMI-like trace: artifact runs may be hours long
+        n_samples = int(np.clip(round(t), 2, 600))
+        power = self.node.measure_power(f, p, n_samples=n_samples)
+        return RunResult(
+            time_s=t,
+            energy_j=float(np.mean(power)) * t,
+            mean_freq_ghz=f,
+            mean_power_w=float(np.mean(power)),
+            freq_trace=np.full(n_samples, f),
+            power_trace=power,
         )
 
     def stress_grid(self, freqs=None, cores=None):
@@ -165,12 +232,33 @@ class FleetNode:
 
     # -- reservation ledger ------------------------------------------------
 
-    def free_cores(self, now: float) -> int:
-        busy = sum(r.cores for r in self.reservations if r.end_s > now + 1e-12)
+    def free_cores(self, now: float, *, exclude_job: Optional[int] = None) -> int:
+        """Cores not reserved at sim time ``now``. ``exclude_job`` drops one
+        job's own reservation from the count — the migration re-plan asks
+        "where could this job go if it left its current slot?"."""
+        busy = sum(
+            r.cores
+            for r in self.reservations
+            if r.end_s > now + 1e-12 and r.job_id != exclude_job
+        )
         return self.spec.max_cores - busy
 
     def reserve(self, start_s: float, end_s: float, cores: int, job_id: int) -> None:
         self.reservations.append(Reservation(start_s, end_s, cores, job_id))
+
+    def truncate_reservation(self, job_id: int, now: float) -> int:
+        """Preemption hook: end ``job_id``'s active reservation at ``now``.
+
+        The ledger stays honest — the cores were genuinely busy until the
+        preemption instant (utilization counts them) and are free after it.
+        Returns the number of cores released (0 if no active reservation).
+        """
+        freed = 0
+        for r in self.reservations:
+            if r.job_id == job_id and r.end_s > now + 1e-12:
+                r.end_s = now
+                freed += r.cores
+        return freed
 
     def utilization(self, horizon_s: float) -> float:
         """Busy core-seconds / capacity core-seconds over [0, horizon]."""
@@ -264,6 +352,33 @@ class AppTerms:
 def family_key(app: str, input_size: float) -> AppTerms:
     """The canonical engine cache key of one workload family."""
     return AppTerms(app=app, input_size=float(input_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class TermsFamily:
+    """A believed surface over ANY engine terms object (artifact intake).
+
+    ``AppTerms`` is bound to the node profile table; dry-run artifacts
+    arrive as ``RooflineTerms`` instead. This wrapper gives such a family
+    the same contract the scheduler relies on — frozen/hashable (the
+    ``time_scale == 1.0`` instance is the engine cache key), a
+    ``step_time(f, cores)`` believed surface in seconds, a ``time_scale``
+    that re-characterization can ``dataclasses.replace`` when telemetry
+    measures drift, and a ``(app, input_size)`` telemetry family.
+    """
+
+    base: object  # hashable terms with step_time(f, cores) — RooflineTerms
+    app: str
+    input_size: float = 1.0
+    time_scale: float = 1.0
+    source: str = "artifact"
+
+    def step_time(self, f_ghz: float, cores) -> float:
+        return self.base.step_time(float(f_ghz), int(cores)) * self.time_scale
+
+    @property
+    def family(self) -> Tuple[str, float]:
+        return (self.app, self.input_size)
 
 
 # ---------------------------------------------------------------------------

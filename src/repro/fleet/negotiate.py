@@ -1,0 +1,380 @@
+"""Fleet-scale pareto negotiation: trade slack ACROSS jobs, not per job.
+
+PR 3's deadline fallback is per-job greedy: when a job's energy optimum
+cannot meet its deadline on any node with capacity, the scheduler walks
+that job's own energy/time frontier cheapest-first and buys feasibility
+with the fewest extra joules — *for that job, in isolation*. But the
+fleet-level optimum lives on the JOINT trade-off: one job's unused
+deadline slack can be spent (move it to a slower/cheaper frontier point,
+or to fewer cores) to free capacity that lets another job take a faster
+point it could not otherwise afford, and the joules saved by the second
+job can exceed the joules spent by the first. The ``Negotiator`` searches
+that joint space.
+
+The protocol per scheduling round:
+
+1. **Options** — every pending job's deterministic frontier (ONE batched
+   ``PlanningEngine.pareto_many`` pass) is projected onto every node with
+   individual capacity via the shared ``cluster.project_point`` ("plan
+   energy × node skew"), giving each job a finite option set
+   (frontier point × node) with projected time (s) and energy (J).
+2. **Seed** — the PR-3 cheapest-first greedy (deadline order, frontier
+   walked cheapest → fastest, first deadline-feasible node, second pass
+   without the deadline) is replayed on the option sets. The seed IS the
+   fallback assignment, so the negotiated result can only improve on it.
+3. **Negotiate** — deterministic local search over the lexicographic
+   objective ``(jobs deferred, deadline misses, total projected joules)``:
+
+   * *single reassignments*: move one job to a cheaper (point, node)
+     that fits the remaining capacity;
+   * *slack exchanges*: for a deferred or deadline-missing job, pick a
+     deadline-feasible target option and free the missing cores on its
+     node by relocating other jobs — helpers are chosen greedily by
+     marginal joules per core freed, and helper moves may spend a
+     feasible job's slack (slower point, other node) but never create a
+     new miss or deferral. The exchange's total Δjoules is the price of
+     the slack it buys.
+
+   Every accepted move strictly improves the objective (energy-only moves
+   must clear ``energy_margin`` — projected-joule churn below the model's
+   own noise floor is not worth placement thrash), so the search
+   terminates and the invariants hold by construction:
+
+   * node capacity is never exceeded at any step;
+   * the negotiated ``(deferred, misses, energy)`` is never lexically
+     worse than the cheapest-first seed.
+
+``NegotiationResult`` keeps both the seed and the final assignment so the
+round log (and the tests) can audit exactly what negotiation bought.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.fleet.cluster import NodePool, project_point
+
+
+@dataclasses.dataclass(frozen=True)
+class Option:
+    """One candidate assignment: a frontier point projected onto a node."""
+
+    point_idx: int  # index into the job's frontier (fastest point first)
+    node_idx: int
+    cores: int
+    frequency_ghz: float  # node-snapped, GHz
+    time_s: float  # node-projected run time, s
+    energy_j: float  # node-projected energy, J
+    meets_deadline: bool
+
+
+@dataclasses.dataclass
+class NegotiationResult:
+    """The negotiated assignment plus the seed it had to beat."""
+
+    assignments: List[Optional[Option]]  # None = deferred to a later round
+    seed: List[Optional[Option]]
+    n_moves: int  # single reassignments applied
+    n_exchanges: int  # multi-job slack exchanges applied
+
+    @staticmethod
+    def projected(assignments: Sequence[Optional[Option]]) -> Tuple[int, int, float]:
+        """The lexicographic objective of an assignment:
+        (jobs deferred, deadline misses, total projected joules)."""
+        deferred = sum(a is None for a in assignments)
+        misses = sum(a is not None and not a.meets_deadline for a in assignments)
+        energy = float(sum(a.energy_j for a in assignments if a is not None))
+        return deferred, misses, energy
+
+    @property
+    def improved(self) -> bool:
+        return self.projected(self.assignments) < self.projected(self.seed)
+
+
+class Negotiator:
+    """Joint (frontier point × node) assignment over one scheduling round.
+
+    Args:
+        pool: the fleet (node specs supply the projection skews).
+        power_model: the engine's fitted reference power model (W).
+        energy_margin: relative improvement an energy-only move must clear
+            (fraction of the moved job's current projected energy);
+            deferred/miss improvements are always taken.
+        max_moves: hard cap on accepted moves per round (the objective is
+            strictly decreasing, so this is a backstop, not a tuning knob).
+    """
+
+    def __init__(
+        self,
+        pool: NodePool,
+        power_model,
+        *,
+        energy_margin: float = 0.02,
+        max_moves: int = 500,
+    ):
+        self.pool = pool
+        self.power = power_model
+        self.energy_margin = float(energy_margin)
+        self.max_moves = int(max_moves)
+
+    # -- option enumeration -------------------------------------------------
+
+    def _options(
+        self, terms, frontier, free: Sequence[int], slack: float
+    ) -> List[Option]:
+        """Every (frontier point, node) pair with individual capacity,
+        projected via the one shared ``project_point`` definition."""
+        out: List[Option] = []
+        for k, pt in enumerate(frontier):
+            for m, node in enumerate(self.pool):
+                if pt.chips > free[m]:
+                    continue
+                f_snap, t_exp, e_exp = project_point(
+                    node.spec, self.power, terms, pt.chips,
+                    pt.frequency_ghz, pt.step_time_s,
+                )
+                out.append(
+                    Option(
+                        point_idx=k,
+                        node_idx=m,
+                        cores=pt.chips,
+                        frequency_ghz=f_snap,
+                        time_s=t_exp,
+                        energy_j=e_exp,
+                        meets_deadline=slack > 0 and t_exp <= slack,
+                    )
+                )
+        return out
+
+    # -- the PR-3 fallback, replayed on the option sets ---------------------
+
+    def _seed(
+        self,
+        jobs,
+        options: List[List[Option]],
+        frontiers,
+        free: Sequence[int],
+        slacks: Sequence[float],
+    ) -> List[Optional[Option]]:
+        """Cheapest-first greedy in deadline order — the per-job fallback
+        the negotiation must never be worse than. Walks each job's frontier
+        cheapest → fastest, takes the cheapest deadline-feasible node, then
+        retries without the deadline (better a late cheap job than a
+        starved queue); leaves the job deferred when nothing fits."""
+        n = len(jobs)
+        assign: List[Optional[Option]] = [None] * n
+        remaining = list(free)
+        order = sorted(range(n), key=lambda i: (jobs[i].deadline_s, jobs[i].job_id))
+        for i in order:
+            chosen = None
+            passes = (True, False) if slacks[i] > 0 else (False,)
+            for require_deadline in passes:
+                # frontier is fastest-first: reversed = cheapest-first walk
+                for k in reversed(range(len(frontiers[i]))):
+                    cand = [
+                        (o.energy_j, o.node_idx, o)
+                        for o in options[i]
+                        if o.point_idx == k
+                        and o.cores <= remaining[o.node_idx]
+                        and (not require_deadline or o.meets_deadline)
+                    ]
+                    if cand:
+                        chosen = min(cand)[2]
+                        break
+                if chosen is not None:
+                    break
+            assign[i] = chosen
+            if chosen is not None:
+                remaining[chosen.node_idx] -= chosen.cores
+        return assign
+
+    # -- local search -------------------------------------------------------
+
+    @staticmethod
+    def _remaining(
+        assignments: Sequence[Optional[Option]], free: Sequence[int]
+    ) -> List[int]:
+        rem = list(free)
+        for a in assignments:
+            if a is not None:
+                rem[a.node_idx] -= a.cores
+        return rem
+
+    def _try_single_moves(
+        self, jobs, options, assign, remaining
+    ) -> Optional[Tuple[int, Option]]:
+        """First single reassignment that improves (deferred, misses,
+        energy) — deterministic scan in job-id order, options cheapest
+        first."""
+        order = sorted(range(len(jobs)), key=lambda i: jobs[i].job_id)
+        for i in order:
+            cur = assign[i]
+            for o in sorted(
+                options[i],
+                key=lambda o: (o.energy_j, o.node_idx, o.point_idx),
+            ):
+                if o == cur:
+                    continue
+                headroom = remaining[o.node_idx] + (
+                    cur.cores if cur is not None and cur.node_idx == o.node_idx
+                    else 0
+                )
+                if o.cores > headroom:
+                    continue
+                if cur is None:
+                    return (i, o)  # un-deferring always improves the lexkey
+                miss_delta = int(not o.meets_deadline) - int(not cur.meets_deadline)
+                if miss_delta < 0:
+                    return (i, o)
+                if miss_delta > 0:
+                    continue
+                if o.energy_j < cur.energy_j * (1.0 - self.energy_margin):
+                    return (i, o)
+        return None
+
+    def _try_exchange(
+        self, jobs, options, assign, remaining
+    ) -> Optional[List[Tuple[int, Option]]]:
+        """One slack exchange: place a deferred/missing job at a
+        deadline-feasible option by relocating other jobs off its node.
+
+        Helper moves are ranked by marginal joules per core freed and may
+        spend a feasible job's slack, but never create a new miss or
+        deferral — the exchange's net effect on the lexicographic objective
+        is therefore always an improvement (one fewer deferral or miss)."""
+        stressed = [
+            i
+            for i in range(len(jobs))
+            if assign[i] is None or not assign[i].meets_deadline
+        ]
+        stressed.sort(key=lambda i: (jobs[i].deadline_s, jobs[i].job_id))
+        for i in stressed:
+            cur = assign[i]
+            targets = [o for o in options[i] if o.meets_deadline]
+            # fewest extra joules that buy the missing feasibility first
+            targets.sort(key=lambda o: (o.energy_j, o.node_idx, o.point_idx))
+            for o in targets:
+                m = o.node_idx
+                own = cur.cores if cur is not None and cur.node_idx == m else 0
+                need = o.cores - own - remaining[m]
+                if need <= 0:
+                    continue  # a plain single move covers this case
+                helpers = self._free_cores_on(
+                    jobs, options, assign, remaining, m, need, skip=i
+                )
+                if helpers is not None:
+                    return helpers + [(i, o)]
+        return None
+
+    def _free_cores_on(
+        self, jobs, options, assign, remaining, node_idx, need, *, skip
+    ) -> Optional[List[Tuple[int, Option]]]:
+        """Greedy helper selection: relocate jobs off ``node_idx`` until
+        ``need`` cores are free, cheapest Δjoules per freed core first.
+        Returns the move list, or None when the node cannot be drained."""
+        rem = list(remaining)
+        moved = {}
+        freed_total = 0
+        while freed_total < need:
+            best = None
+            for j in range(len(jobs)):
+                if (
+                    j == skip
+                    or j in moved
+                    or assign[j] is None
+                    or assign[j].node_idx != node_idx
+                ):
+                    continue
+                cur = assign[j]
+                for alt in options[j]:
+                    freed = cur.cores - (
+                        alt.cores if alt.node_idx == node_idx else 0
+                    )
+                    if freed <= 0:
+                        continue
+                    headroom = rem[alt.node_idx] + (
+                        cur.cores if alt.node_idx == node_idx else 0
+                    )
+                    if alt.cores > headroom:
+                        continue
+                    if cur.meets_deadline and not alt.meets_deadline:
+                        continue  # helpers never create a new miss
+                    cost = alt.energy_j - cur.energy_j
+                    score = (
+                        cost / freed, jobs[j].job_id,
+                        alt.energy_j, alt.node_idx, alt.point_idx,
+                    )
+                    if best is None or score < best[0]:
+                        best = (score, j, freed, alt)
+            if best is None:
+                return None
+            _, j, freed, alt = best
+            cur = assign[j]
+            rem[cur.node_idx] += cur.cores
+            rem[alt.node_idx] -= alt.cores
+            moved[j] = alt
+            freed_total += freed
+        return list(moved.items())
+
+    # -- entry point --------------------------------------------------------
+
+    def negotiate(
+        self,
+        jobs,
+        terms_list: Sequence,
+        frontiers: Sequence[Sequence],
+        free_cores: Sequence[int],
+        slacks: Sequence[float],
+    ) -> NegotiationResult:
+        """Negotiate one round's joint assignment.
+
+        Args:
+            jobs: the round's pending jobs (deadline_s in sim seconds).
+            terms_list: per-job believed surfaces (for frequency snapping).
+            frontiers: per-job deterministic frontiers from ``pareto_many``.
+            free_cores: per-node free cores at the round's sim time.
+            slacks: per-job remaining deadline slack in seconds.
+
+        Returns:
+            ``NegotiationResult`` aligned with ``jobs``; ``None`` entries
+            stay pending and are re-planned next round.
+        """
+        options = [
+            self._options(t, fr, free_cores, s)
+            for t, fr, s in zip(terms_list, frontiers, slacks)
+        ]
+        seed = self._seed(jobs, options, frontiers, free_cores, slacks)
+        assign = list(seed)
+        remaining = self._remaining(assign, free_cores)
+        n_moves = n_exchanges = 0
+        for _ in range(self.max_moves):
+            single = self._try_single_moves(jobs, options, assign, remaining)
+            if single is not None:
+                i, o = single
+                assign[i] = o
+                n_moves += 1
+                remaining = self._remaining(assign, free_cores)
+                continue
+            exchange = self._try_exchange(jobs, options, assign, remaining)
+            if exchange is not None:
+                before = NegotiationResult.projected(assign)
+                rollback = {i: assign[i] for i, _ in exchange}
+                for i, o in exchange:
+                    assign[i] = o
+                remaining = self._remaining(assign, free_cores)
+                after = NegotiationResult.projected(assign)
+                if after >= before or min(remaining) < 0:
+                    # defensive: a helper chain that failed to improve (or
+                    # oversubscribed) is undone; the scan is then done
+                    for i, prev in rollback.items():
+                        assign[i] = prev
+                    remaining = self._remaining(assign, free_cores)
+                    break
+                n_exchanges += 1
+                continue
+            break
+        assert min(self._remaining(assign, free_cores)) >= 0
+        return NegotiationResult(
+            assignments=assign, seed=seed, n_moves=n_moves, n_exchanges=n_exchanges
+        )

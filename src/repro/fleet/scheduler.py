@@ -34,6 +34,17 @@ windowed real observations, so the refit costs no extra measurement runs
 — with ALL stale families fitted in ONE ``svr.fit_many`` batch and the
 fresh models installed into the engine cache via
 ``PlanningEngine.install_fit`` under the same family keys.
+
+Two opt-in upgrades close the remaining gaps (PR 4):
+
+* ``negotiator=Negotiator(...)`` replaces per-job greedy placement with
+  the fleet-wide pareto negotiation of ``fleet/negotiate.py`` (ONE
+  batched ``pareto_many`` per round, joint assignment never lexically
+  worse than the cheapest-first seed);
+* ``migration=MigrationPolicy(...)`` adds preemptive rebalancing: a
+  material drift re-fit re-plans the family's in-flight jobs and moves
+  them when the believed remaining-energy saving clears the migration
+  cost — with the abandoned joules honestly charged.
 """
 
 from __future__ import annotations
@@ -54,19 +65,39 @@ from repro.core.engine import (
 )
 from repro.core.node_sim import CORES_PER_SOCKET, RunResult
 from repro.core.power import fit_power_model
-from repro.fleet.cluster import AppTerms, FleetNode, NodePool, family_key
-from repro.fleet.telemetry import Family, Observation, TelemetryHub
+from repro.fleet.cluster import (
+    AppTerms,
+    FleetNode,
+    NodePool,
+    family_key,
+    project_point,
+)
+from repro.fleet.negotiate import Negotiator
+from repro.fleet.telemetry import (
+    Family,
+    Observation,
+    PreemptionRecord,
+    TelemetryHub,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class Job:
-    """One queued workload: (app, input) plus its service-level deadline."""
+    """One queued workload: (app, input) plus its service-level deadline.
+
+    ``terms`` is the artifact-intake hook: when set (a frozen,
+    engine-compatible believed surface such as ``cluster.TermsFamily``),
+    the scheduler plans and runs the job on that surface instead of the
+    node profile table — ``workloads_from_artifacts`` records enter the
+    fleet queue this way.
+    """
 
     job_id: int
     app: str
     input_size: float
     deadline_s: float  # absolute sim time by which the job must finish
     arrival_s: float = 0.0
+    terms: Optional[object] = None  # explicit believed surface (artifacts)
 
 
 @dataclasses.dataclass
@@ -81,6 +112,8 @@ class Placement:
     predicted_time_s: float  # node-projected (reference time × speed skew)
     predicted_energy_j: float  # node-projected plan energy
     pareto_fallback: bool = False  # True: deadline bought on the frontier
+    negotiated: bool = False  # True: chosen by the round's Negotiator
+    migrated_from: Optional[str] = None  # node the job was preempted off
 
 
 @dataclasses.dataclass
@@ -89,6 +122,25 @@ class CompletedJob:
     result: RunResult
     finish_s: float
     met_deadline: bool
+    # honest preemption accounting: joules already burned on abandoned
+    # segments plus the charged migration cost, the wall time those
+    # segments took, and how often the job moved
+    prior_energy_j: float = 0.0
+    prior_time_s: float = 0.0
+    migrations: int = 0
+
+    @property
+    def total_energy_j(self) -> float:
+        """Everything the fleet actually spent on this job (J): the final
+        segment plus every preempted partial segment and migration charge."""
+        return self.result.energy_j + self.prior_energy_j
+
+    @property
+    def total_time_s(self) -> float:
+        """The job's whole wall time (s), abandoned segments included —
+        the time axis must stay consistent with ``total_energy_j`` or a
+        migrated job's implied power would read ~segments× too high."""
+        return self.result.time_s + self.prior_time_s
 
 
 @dataclasses.dataclass
@@ -100,6 +152,27 @@ class RoundLog:
     planned: bool  # True: this round issued its (single) plan_many call
     n_placed: int = 0
     refit_families: List[Family] = dataclasses.field(default_factory=list)
+    negotiated: bool = False  # True: placements came from the Negotiator
+    n_moves: int = 0  # negotiation single reassignments
+    n_exchanges: int = 0  # negotiation multi-job slack exchanges
+    n_migrated: int = 0  # in-flight jobs preempted + relaunched post-refit
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPolicy:
+    """When a drift-triggered re-fit justifies preempting a running job.
+
+    A migration is charged ``cost_j`` joules (checkpoint + transfer +
+    restart) on top of the energy already burned on the abandoned segment,
+    so it only pays when the believed remaining-energy saving clears the
+    cost with ``min_saving_frac`` to spare.
+    """
+
+    cost_j: float = 2_000.0  # joules charged per preemption
+    min_drift: float = 0.10  # |refit scale ratio - 1| that triggers a re-plan
+    min_remaining_frac: float = 0.25  # don't move nearly-finished jobs
+    min_saving_frac: float = 0.05  # saving must also clear this × remaining
+    max_migrations_per_job: int = 1
 
 
 def apply_due_events(
@@ -190,7 +263,20 @@ class FleetScheduler:
         *,
         char_freqs: Optional[Sequence[float]] = None,
         char_cores: Optional[Sequence[int]] = None,
+        negotiator: Optional[Negotiator] = None,
+        migration: Optional[MigrationPolicy] = None,
     ):
+        """Args:
+            pool / engine / telemetry: the fleet, its (single, shared)
+                planning engine and the observation hub.
+            char_freqs / char_cores: the re-characterization refit grid
+                (GHz / cores); defaults to the engine's planning grid.
+            negotiator: when set, rounds place via fleet-wide pareto
+                negotiation (``negotiate.Negotiator``) instead of the
+                per-job cheapest-first fallback.
+            migration: when set, a material drift re-fit triggers the
+                preemptive-rebalancing pass over in-flight jobs.
+        """
         self.pool = pool
         self.engine = engine
         self.telemetry = telemetry if telemetry is not None else TelemetryHub()
@@ -201,18 +287,37 @@ class FleetScheduler:
         self.char_cores = tuple(
             engine.chip_grid if char_cores is None else char_cores
         )
+        self.negotiator = negotiator
+        self.migration = migration
         self.rounds: List[RoundLog] = []
         self.completed: List[CompletedJob] = []
         self._pending: List[Job] = []
         self._finish_queue: List[CompletedJob] = []
+        # telemetry family -> the engine cache key its jobs actually plan
+        # under (family_key for profiled apps, the Job.terms instance for
+        # artifact jobs) — re-characterization must refresh the same key
+        self._family_keys: Dict[Family, object] = {}
+        # last refresh's believed-scale ratio per family (new/old) — the
+        # migration pass's materiality signal
+        self._refit_ratio: Dict[Family, float] = {}
 
     # -- the believed model ------------------------------------------------
+
+    def _terms_key(self, job: Job):
+        """The engine cache key of one job's workload family."""
+        key = (
+            job.terms
+            if job.terms is not None
+            else family_key(job.app, job.input_size)
+        )
+        self._family_keys[(job.app, job.input_size)] = key
+        return key
 
     def _workload(self, job: Job, now: float, free_cap: int) -> Workload:
         slack = job.deadline_s - now
         return Workload(
             arch=job.app,
-            terms=family_key(job.app, job.input_size),
+            terms=self._terms_key(job),
             constraints=Constraints(
                 max_cores=free_cap,
                 max_time_s=slack if slack > 0 else None,
@@ -222,34 +327,110 @@ class FleetScheduler:
     # -- one scheduling round ---------------------------------------------
 
     def step(self, now: float) -> RoundLog:
-        """Run one round at sim time ``now``: ingest completions, refresh
-        stale families (one ``fit_many``), plan every pending job (one
-        ``plan_many``), place and launch what fits."""
+        """Run ONE scheduling round at sim time ``now`` (seconds).
+
+        The round is the subsystem's core loop:
+
+        1. ingest completions (finish time <= now) into telemetry;
+        2. refresh every drift-flagged family in one ``svr.fit_many``
+           batch and install the models (``PlanningEngine.install_fit``);
+        3. if a refresh materially moved a family's surface and a
+           ``MigrationPolicy`` is set, re-plan that family's in-flight
+           jobs (one ``pareto_many`` batch) and preempt/relaunch the ones
+           whose believed remaining-energy saving clears the migration
+           cost;
+        4. plan + place every pending job in ONE batched engine pass
+           (``Constraints(max_cores=free cores, max_time_s=deadline
+           slack)``): with a ``Negotiator`` configured, that pass is
+           ``pareto_many`` (the frontier's cheapest feasible point IS the
+           energy argmin, so a separate ``plan_many`` would recompute the
+           identical objective tensor) feeding the fleet-wide joint
+           assignment; otherwise it is ``plan_many`` feeding the per-job
+           cheapest-first fallback. Launch what fits.
+
+        Returns the round's ``RoundLog`` (also appended to ``rounds``).
+        Energies throughout are joules, times seconds, frequencies GHz.
+        """
         self._ingest(now)
         refit = self._refresh_stale(now)
+        n_migrated = self._maybe_migrate(now, refit)
         pending_now = [j for j in self._pending if j.arrival_s <= now + 1e-12]
         cap = self.pool.max_free_cores(now)
+        planned = bool(pending_now) and cap > 0
         log = RoundLog(
             now=now,
             n_pending=len(pending_now),
-            planned=bool(pending_now) and cap > 0,
+            planned=planned,
             refit_families=refit,
+            # only rounds that actually placed through the Negotiator count
+            negotiated=planned and self.negotiator is not None,
+            n_migrated=n_migrated,
         )
         if log.planned:
             workloads = [self._workload(j, now, cap) for j in pending_now]
-            plans = self.engine.plan_many(workloads)  # THE one batched call
-            order = sorted(
-                range(len(pending_now)),
-                key=lambda i: (pending_now[i].deadline_s, pending_now[i].job_id),
-            )
-            for i in order:
-                placement = self._place(pending_now[i], workloads[i], plans[i], now)
-                if placement is not None:
-                    self._launch(placement)
-                    self._pending.remove(pending_now[i])
-                    log.n_placed += 1
+            if self.negotiator is not None:
+                self._place_negotiated(pending_now, workloads, now, log)
+            else:
+                plans = self.engine.plan_many(workloads)  # THE one batched call
+                order = sorted(
+                    range(len(pending_now)),
+                    key=lambda i: (
+                        pending_now[i].deadline_s,
+                        pending_now[i].job_id,
+                    ),
+                )
+                for i in order:
+                    placement = self._place(
+                        pending_now[i], workloads[i], plans[i], now
+                    )
+                    if placement is not None:
+                        self._launch(placement)
+                        self._pending.remove(pending_now[i])
+                        log.n_placed += 1
         self.rounds.append(log)
         return log
+
+    def _place_negotiated(
+        self,
+        pending_now: List[Job],
+        workloads: List[Workload],
+        now: float,
+        log: RoundLog,
+    ) -> None:
+        """The negotiated round: ONE batched ``pareto_many`` over every
+        pending job (the round's single engine pass — fits, grid
+        prediction and objective tensor shared with any later call), then
+        the fleet-wide joint assignment. The negotiation seed replays the
+        cheapest-first fallback, so the launched assignment's projected
+        (deferred, misses, joules) is never worse."""
+        frontiers = self.engine.pareto_many(workloads)
+        terms_list = [w.terms for w in workloads]
+        free = [n.free_cores(now) for n in self.pool]
+        slacks = [j.deadline_s - now for j in pending_now]
+        result = self.negotiator.negotiate(
+            pending_now, terms_list, frontiers, free, slacks
+        )
+        log.n_moves = result.n_moves
+        log.n_exchanges = result.n_exchanges
+        for i, opt in enumerate(result.assignments):
+            if opt is None:
+                continue  # deferred: replanned in the next round's batch
+            placement = Placement(
+                job=pending_now[i],
+                node=self.pool[opt.node_idx].name,
+                frequency_ghz=opt.frequency_ghz,
+                cores=opt.cores,
+                start_s=now,
+                predicted_time_s=opt.time_s,
+                predicted_energy_j=opt.energy_j,
+                # any point other than the frontier's cheapest (= last)
+                # spent extra joules on feasibility
+                pareto_fallback=opt.point_idx != len(frontiers[i]) - 1,
+                negotiated=True,
+            )
+            self._launch(placement)
+            self._pending.remove(pending_now[i])
+            log.n_placed += 1
 
     # -- placement: energy-aware bin-pack + pareto deadline fallback -------
 
@@ -275,17 +456,11 @@ class FleetScheduler:
         for idx, node in enumerate(self.pool):
             if node.free_cores(now) < cores:
                 continue
-            f_snap = node.spec.snap_frequency(f)
-            t_ref = ref_time_s
-            if f_snap != f:
-                believed = terms.step_time(f, cores)
-                t_ref *= terms.step_time(f_snap, cores) / max(believed, 1e-12)
-            t_exp = node.spec.expected_time(t_ref)
+            f_snap, t_exp, e_exp = project_point(
+                node.spec, self.engine.power, terms, cores, f, ref_time_s
+            )
             if require_deadline and t_exp > slack:
                 continue
-            e_exp = node.spec.expected_energy(
-                self.engine.power, f_snap, cores, t_ref
-            )
             out.append((e_exp, idx, node, t_exp, f_snap))
         return sorted(out, key=lambda c: (c[0], c[1]))
 
@@ -349,12 +524,35 @@ class FleetScheduler:
                 return node
         raise KeyError(name)
 
-    def _launch(self, placement: Placement) -> None:
+    def _run_on(self, node: FleetNode, job: Job, f: float, p: int) -> RunResult:
+        """Execute one job on one node. The dispatch mirrors the planning
+        dispatch (``Job.terms``): a terms-backed job runs on its own base
+        surface even when its app name collides with a profiled
+        application — planning and execution must describe the same
+        workload or telemetry would read the mismatch as drift."""
+        if job.terms is None:
+            return node.run_fixed(job.app, f, p, job.input_size)
+        base = getattr(job.terms, "base", job.terms)  # truth: unscaled surface
+        return node.run_terms(job.app, base, f, p)
+
+    def _launch(
+        self,
+        placement: Placement,
+        *,
+        prior_energy_j: float = 0.0,
+        prior_time_s: float = 0.0,
+        migrations: int = 0,
+        work_frac: float = 1.0,
+    ) -> None:
+        """Run a placement (or, after a preemption, the ``work_frac``
+        remainder of one) and enqueue its completion."""
         job = placement.job
         node = self._node_by_name(placement.node)
-        result = node.run_fixed(
-            job.app, placement.frequency_ghz, placement.cores, job.input_size
+        result = self._run_on(
+            node, job, placement.frequency_ghz, placement.cores
         )
+        if work_frac < 1.0:  # the remainder of a preempted job
+            result = node.rescale(result, work_frac)
         finish = placement.start_s + result.time_s
         node.reserve(placement.start_s, finish, placement.cores, job.job_id)
         self._finish_queue.append(
@@ -363,6 +561,9 @@ class FleetScheduler:
                 result=result,
                 finish_s=finish,
                 met_deadline=finish <= job.deadline_s + 1e-9,
+                prior_energy_j=prior_energy_j,
+                prior_time_s=prior_time_s,
+                migrations=migrations,
             )
         )
 
@@ -436,21 +637,26 @@ class FleetScheduler:
 
     def _refresh_stale(self, now: float) -> List[Family]:
         """Refresh every drift-flagged family in ONE ``svr.fit_many`` batch
-        and install the refreshed models into the engine cache."""
+        and install the refreshed models into the engine cache. Works for
+        profiled-app families (``AppTerms``) and artifact families
+        (``TermsFamily``) alike: the refreshed believed surface is the old
+        one with its ``time_scale`` re-estimated from telemetry. Records
+        each family's scale ratio (new/old) in ``_refit_ratio`` — the
+        migration pass's materiality signal."""
         stale = self.telemetry.stale_families()
+        self._refit_ratio = {}
         if not stale:
             return []
-        keys = [family_key(app, n) for app, n in stale]
+        keys = [
+            self._family_keys.get(fam, family_key(*fam)) for fam in stale
+        ]
         new_terms = []
         for fam, key in zip(stale, keys):
             old = self.engine.cached_terms(key) or key
+            scale = self._drift_scale(fam, old)
+            self._refit_ratio[fam] = scale / max(old.time_scale, 1e-12)
             new_terms.append(
-                AppTerms(
-                    app=fam[0],
-                    input_size=fam[1],
-                    time_scale=self._drift_scale(fam, old),
-                    source="telemetry",
-                )
+                dataclasses.replace(old, time_scale=scale, source="telemetry")
             )
         sets = [self._refit_set(t, fam) for t, fam in zip(new_terms, stale)]
         models = svr_mod.fit_many(sets, **ENGINE_FIT_KW)  # ONE batch
@@ -463,6 +669,189 @@ class FleetScheduler:
             )
             self.telemetry.mark_refreshed(fam, now)
         return stale
+
+    # -- preemptive rebalancing after a material re-fit ---------------------
+
+    def _maybe_migrate(self, now: float, refit: List[Family]) -> int:
+        """Re-plan in-flight jobs of materially re-characterized families.
+
+        A drift re-fit can reveal that a running job's placement is no
+        longer near its energy optimum (the family got slower, so staying
+        put now costs more believed joules than moving). For every
+        in-flight job of a family whose refreshed ``time_scale`` moved by
+        at least ``MigrationPolicy.min_drift``, this pass:
+
+        1. estimates the believed remaining work fraction from the
+           *refreshed* surface projected onto the job's current node;
+        2. re-plans all candidates in ONE ``pareto_many`` batch (capacity
+           excludes each job's own reservation — "where could it go if it
+           left?", deadline slack rescaled to the full-run frame);
+        3. projects each frontier point onto each node with capacity and
+           preempts + relaunches the remainder wherever the believed
+           remaining-energy saving clears ``cost_j`` plus the
+           ``min_saving_frac`` margin. Never migrates a job that is
+           believed on-deadline into a believed miss.
+
+        Returns the number of jobs migrated. All accounting is honest:
+        the abandoned segment's measured joules and the migration charge
+        ride on the job's ``CompletedJob.prior_energy_j``, the old
+        reservation is truncated at the preemption instant, and telemetry
+        keeps a ``PreemptionRecord`` per move.
+        """
+        pol = self.migration
+        if pol is None or not refit:
+            return 0
+        material = {
+            fam
+            for fam in refit
+            if abs(self._refit_ratio.get(fam, 1.0) - 1.0) >= pol.min_drift
+        }
+        if not material:
+            return 0
+        candidates = []
+        workloads = []
+        for c in self._finish_queue:
+            job = c.placement.job
+            fam = (job.app, job.input_size)
+            if (
+                c.finish_s <= now + 1e-9
+                or fam not in material
+                or c.migrations >= pol.max_migrations_per_job
+            ):
+                continue
+            key = self._terms_key(job)
+            terms = self.engine.cached_terms(key) or key  # refreshed belief
+            node = self._node_by_name(c.placement.node)
+            t_full = node.spec.expected_time(
+                terms.step_time(c.placement.frequency_ghz, c.placement.cores)
+            )
+            elapsed = now - c.placement.start_s
+            remaining_frac = 1.0 - elapsed / max(t_full, 1e-12)
+            if remaining_frac < pol.min_remaining_frac:
+                continue
+            _, _, e_full = project_point(
+                node.spec, self.engine.power, terms, c.placement.cores,
+                c.placement.frequency_ghz, terms.step_time(
+                    c.placement.frequency_ghz, c.placement.cores
+                ),
+            )
+            slack = job.deadline_s - now
+            free_cap = max(
+                n.free_cores(now, exclude_job=job.job_id) for n in self.pool
+            )
+            candidates.append(
+                (c, terms, remaining_frac, e_full * remaining_frac, slack)
+            )
+            workloads.append(
+                Workload(
+                    arch=job.app,
+                    terms=key,
+                    constraints=Constraints(
+                        max_cores=free_cap,
+                        # the frontier speaks full-run times; the remainder
+                        # only runs remaining_frac of them
+                        max_time_s=(
+                            slack / remaining_frac if slack > 0 else None
+                        ),
+                    ),
+                )
+            )
+        if not candidates:
+            return 0
+        frontiers = self.engine.pareto_many(workloads)  # ONE batched pass
+        migrated = 0
+        for (c, terms, r_b, e_remain_cur, slack), frontier in zip(
+            candidates, frontiers
+        ):
+            job = c.placement.job
+            # believed on-deadline status of the current placement
+            node_cur = self._node_by_name(c.placement.node)
+            t_remain_cur = node_cur.spec.expected_time(
+                terms.step_time(c.placement.frequency_ghz, c.placement.cores)
+            ) * r_b
+            meets_now = slack > 0 and t_remain_cur <= slack
+            best = None
+            for pt in frontier:
+                for idx, node in enumerate(self.pool):
+                    free = node.free_cores(now, exclude_job=job.job_id)
+                    if pt.chips > free:
+                        continue
+                    f_snap, t_exp, e_exp = project_point(
+                        node.spec, self.engine.power, terms, pt.chips,
+                        pt.frequency_ghz, pt.step_time_s,
+                    )
+                    if meets_now and slack > 0 and r_b * t_exp > slack:
+                        continue  # never trade an on-deadline job into a miss
+                    cand = (r_b * e_exp, idx, f_snap, t_exp, pt)
+                    if best is None or cand[:2] < best[:2]:
+                        best = cand
+            if best is None:
+                continue
+            e_remain_new, idx, f_snap, t_exp, pt = best
+            saving = e_remain_cur - (e_remain_new + pol.cost_j)
+            if saving <= pol.min_saving_frac * e_remain_cur:
+                continue
+            self._preempt_and_relaunch(
+                c, now, self.pool[idx], f_snap, pt.chips,
+                r_b, t_exp, e_remain_new, saving,
+            )
+            migrated += 1
+        return migrated
+
+    def _preempt_and_relaunch(
+        self,
+        c: CompletedJob,
+        now: float,
+        node: FleetNode,
+        f_snap: float,
+        cores: int,
+        believed_frac: float,
+        t_exp_full: float,
+        e_remain_new: float,
+        saving_j: float,
+    ) -> None:
+        """Stop a running job, charge what it burned, relaunch the rest."""
+        pol = self.migration
+        job = c.placement.job
+        old_node = self._node_by_name(c.placement.node)
+        # truth-side progress: the sim knows the run's actual total time
+        elapsed = now - c.placement.start_s
+        done_frac = min(elapsed / c.result.time_s, 1.0)
+        burned = c.result.energy_j * done_frac
+        remaining_true = max(1.0 - done_frac, 0.0)
+        old_node.truncate_reservation(job.job_id, now)
+        self._finish_queue.remove(c)
+        self.telemetry.record_preemption(
+            PreemptionRecord(
+                time_s=now,
+                family=(job.app, job.input_size),
+                job_id=job.job_id,
+                from_node=old_node.name,
+                to_node=node.name,
+                burned_j=burned,
+                migration_cost_j=pol.cost_j,
+                projected_saving_j=saving_j,
+            )
+        )
+        placement = Placement(
+            job=job,
+            node=node.name,
+            frequency_ghz=f_snap,
+            cores=cores,
+            start_s=now,
+            predicted_time_s=believed_frac * t_exp_full,
+            predicted_energy_j=e_remain_new,
+            pareto_fallback=c.placement.pareto_fallback,
+            negotiated=c.placement.negotiated,
+            migrated_from=old_node.name,
+        )
+        self._launch(
+            placement,
+            prior_energy_j=c.prior_energy_j + burned + pol.cost_j,
+            prior_time_s=c.prior_time_s + elapsed,
+            migrations=c.migrations + 1,
+            work_frac=remaining_true,
+        )
 
     # -- the simulation driver ---------------------------------------------
 
@@ -502,10 +891,15 @@ class FleetScheduler:
         return max((c.finish_s for c in self.completed), default=0.0)
 
     def total_energy_j(self) -> float:
-        return float(sum(c.result.energy_j for c in self.completed))
+        """Joules the fleet actually spent, including every preempted
+        partial segment and migration charge (honest accounting)."""
+        return float(sum(c.total_energy_j for c in self.completed))
 
     def deadline_misses(self) -> int:
         return sum(not c.met_deadline for c in self.completed)
+
+    def migrations(self) -> int:
+        return sum(c.migrations for c in self.completed)
 
     def utilization(self) -> Dict[str, float]:
         return self.pool.utilization(self.makespan_s)

@@ -47,6 +47,26 @@ class Observation:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class PreemptionRecord:
+    """One preemptive migration, as accounted (all energies in joules).
+
+    The rebalancing pass must not be able to hide its costs: the joules
+    burned on the abandoned segment, the charged migration cost and the
+    believed saving that justified the move are all logged, so reports can
+    show migration as a net-win *including* what it threw away.
+    """
+
+    time_s: float
+    family: Family
+    job_id: int
+    from_node: str
+    to_node: str
+    burned_j: float  # measured joules spent on the abandoned segment
+    migration_cost_j: float  # checkpoint/transfer/restart charge
+    projected_saving_j: float  # believed net saving that cleared the bar
+
+
 class DriftDetector:
     """Sliding-window relative-error watchdog, one window per family."""
 
@@ -94,10 +114,15 @@ class TelemetryHub:
             window=window, threshold=threshold, min_samples=min_samples
         )
         self.refreshes: List[Tuple[float, Family]] = []  # (sim time, family)
+        self.preemptions: List[PreemptionRecord] = []
 
     def record(self, obs: Observation) -> None:
         self.observations.append(obs)
         self.detector.record(obs.family, obs.rel_time_error)
+
+    def record_preemption(self, rec: PreemptionRecord) -> None:
+        """Log one preemptive migration (the scheduler's rebalancing pass)."""
+        self.preemptions.append(rec)
 
     def stale_families(self) -> List[Family]:
         return self.detector.stale()
@@ -123,3 +148,15 @@ class TelemetryHub:
     @property
     def n_recharacterizations(self) -> int:
         return len(self.refreshes)
+
+    @property
+    def n_preemptions(self) -> int:
+        return len(self.preemptions)
+
+    @property
+    def migration_energy_j(self) -> float:
+        """Total joules charged to migrations: abandoned partial segments
+        plus the per-move checkpoint/transfer/restart cost."""
+        return float(
+            sum(p.burned_j + p.migration_cost_j for p in self.preemptions)
+        )
