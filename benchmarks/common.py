@@ -8,6 +8,12 @@ import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
+# every save_json of the current process, keyed by bench name — the
+# trajectory appender (``run.py --append-trajectory``) snapshots this so a
+# run's results land in ONE dated trajectory entry instead of N files read
+# back from disk
+RUN_RESULTS: dict = {}
+
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
@@ -20,6 +26,45 @@ def timed(fn, *args, **kw):
 
 
 def save_json(name: str, payload):
+    RUN_RESULTS[name] = payload
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+
+
+def append_trajectory(results: dict, *, quick: bool, path: str = None) -> str:
+    """Append one run's bench results to the perf trajectory.
+
+    ``experiments/bench/trajectory.json`` is a JSON list, one entry per
+    benchmark run: ``{"run_at": iso-utc, "quick": bool, "results":
+    {bench name: that bench's saved payload}}`` — the run-over-run record
+    the per-bench files (always overwritten in place) cannot provide.
+    Returns the trajectory path.
+    """
+    path = path or os.path.join(RESULTS_DIR, "trajectory.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                trajectory = json.load(f)
+            if not isinstance(trajectory, list):
+                raise ValueError("trajectory must be a JSON list")
+        except ValueError:
+            # a previously interrupted (or hand-mangled) write must not
+            # brick the record: keep the evidence aside, start fresh
+            os.replace(path, path + ".corrupt")
+            trajectory = []
+    trajectory.append(
+        {
+            "run_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "quick": bool(quick),
+            "results": dict(results),
+        }
+    )
+    # atomic append: a kill mid-dump may lose THIS entry, never the history
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trajectory, f, indent=1, default=float)
+    os.replace(tmp, path)
+    return path

@@ -83,17 +83,32 @@ BENCHES = {
 }
 
 
-def run_selected(only: Optional[str] = None, *, quick: bool = False) -> None:
+def run_selected(
+    only: Optional[str] = None,
+    *,
+    quick: bool = False,
+    append_trajectory: bool = False,
+) -> None:
     """Run one benchmark (or all). Unknown names fail loudly with the
-    valid-name list — never a silent no-op run."""
+    valid-name list — never a silent no-op run. ``append_trajectory``
+    appends the run's saved payloads as one dated entry to
+    ``experiments/bench/trajectory.json`` (the run-over-run perf record;
+    the per-bench JSON files are overwritten in place and keep no
+    history)."""
     if only is not None and only not in BENCHES:
         raise SystemExit(
             f"unknown benchmark {only!r}; valid names: {', '.join(BENCHES)}"
         )
+    from benchmarks import common
+
+    common.RUN_RESULTS.clear()
     print("name,us_per_call,derived")
     for name, runner in BENCHES.items():
         if only in (None, name):
             runner(quick)
+    if append_trajectory:
+        path = common.append_trajectory(common.RUN_RESULTS, quick=quick)
+        print(f"trajectory: appended {len(common.RUN_RESULTS)} result(s) to {path}")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -110,8 +125,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         default=None,
         help=f"run one benchmark: {', '.join(BENCHES)}",
     )
+    ap.add_argument(
+        "--append-trajectory",
+        action="store_true",
+        help="append this run's results to experiments/bench/trajectory.json "
+        "(run-over-run perf record)",
+    )
     args = ap.parse_args(argv)
-    run_selected(args.only, quick=args.quick)
+    run_selected(
+        args.only, quick=args.quick, append_trajectory=args.append_trajectory
+    )
 
 
 if __name__ == "__main__":

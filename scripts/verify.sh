@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# The repo's verification gate, pinned in one place (tests/test_docs.py
+# asserts this script and the commands it runs stay in sync with the
+# documented tier-1 command):
+#
+#   scripts/verify.sh          # tier-1: PYTHONPATH=src python -m pytest -x -q
+#   scripts/verify.sh --fast   # sub-minute loop: ... -m "not slow"
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exec python -m pytest -x -q -m "not slow"
+fi
+exec python -m pytest -x -q

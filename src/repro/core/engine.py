@@ -159,8 +159,38 @@ def solve_grid(
     if not mask.any():
         if on_infeasible == "raise":
             raise ValueError("constraints admit no configuration on the grid")
-        mask = T <= np.min(T) * (1.0 + 1e-3)  # fall back to fastest
+        mask = fastest_feasible_mask(
+            np.asarray(F), np.asarray(P), T, constraints
+        )
     return np.unravel_index(np.argmin(np.where(mask, metric, np.inf)), metric.shape)
+
+
+def fastest_feasible_mask(
+    F: np.ndarray, P: np.ndarray, T: np.ndarray, constraints: Optional[Constraints]
+) -> np.ndarray:
+    """The ``on_infeasible="fastest"`` fallback mask: the (near-)fastest
+    grid points that still honor every NON-time constraint.
+
+    When a deadline masks out the whole grid, "run as fast as possible" is
+    the right answer — but only the time bound is negotiable; a core or
+    frequency cap is physical capacity and must survive the fallback (the
+    seed fell back to the globally fastest point, which could exceed
+    ``max_cores`` and hand the scheduler an unplaceable plan). Only when
+    the non-time constraints themselves admit nothing does the fallback
+    relax to the whole grid.
+    """
+    relaxed = constraint_mask(
+        F,
+        P,
+        T,
+        None
+        if constraints is None
+        else dataclasses.replace(constraints, max_time_s=None),
+    )
+    if not relaxed.any():
+        relaxed = np.ones(np.shape(T), bool)
+    t_min = np.min(np.where(relaxed, T, np.inf))
+    return relaxed & (T <= t_min * (1.0 + 1e-3))
 
 
 def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
@@ -298,7 +328,17 @@ def terms_analytic(arch_id: str, cell) -> RooflineTerms:
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """One planning request. Hashable: identical requests share a fit."""
+    """One planning request. Hashable: identical requests share a fit.
+
+    ``earliest_start_s`` is the horizon-aware scheduler's hook: a known
+    FUTURE job cannot start before its arrival, so its usable slack is
+    ``max_time_s - earliest_start_s``, not the full ``max_time_s`` the
+    caller measured from *now*. The engine shifts the time constraint by
+    this delay (``effective_constraints``) so a future job's frontier is
+    masked by the slack it will actually have at launch — planning it
+    from ``now`` would admit leisurely configurations that miss the
+    deadline once the start delay elapses.
+    """
 
     arch: str
     cell: Optional[object] = None  # configs.base.ShapeCell
@@ -306,6 +346,7 @@ class Workload:
     constraints: Optional[Constraints] = None
     objective: Optional[str] = None  # None -> engine default
     terms: Optional[RooflineTerms] = None  # explicit characterization override
+    earliest_start_s: float = 0.0  # delay before the job can start (s)
 
     @property
     def shape_name(self) -> str:
@@ -315,6 +356,18 @@ class Workload:
     def key(self) -> Hashable:
         """Characterization-cache key: one SVR fit per workload family."""
         return self.terms if self.terms is not None else (self.arch, self.shape_name)
+
+    def effective_constraints(self) -> Optional[Constraints]:
+        """The constraints as seen from the job's earliest start: the time
+        bound shrinks by the start delay (clamped at 0 — an already-blown
+        window leaves an empty mask for ``on_infeasible`` to resolve)."""
+        c = self.constraints
+        delay = float(self.earliest_start_s)
+        if delay <= 0.0 or c is None or c.max_time_s is None:
+            return c
+        return dataclasses.replace(
+            c, max_time_s=max(c.max_time_s - delay, 0.0)
+        )
 
 
 @dataclasses.dataclass
@@ -600,7 +653,7 @@ class PlanningEngine:
             fit.T,
             self._W,
             objective=obj,
-            constraints=w.constraints,
+            constraints=w.effective_constraints(),
             on_infeasible=self.on_infeasible,
             metric=metric,
         )
@@ -703,11 +756,12 @@ class PlanningEngine:
     ) -> List[ParetoPoint]:
         """Extract one workload's frontier from its slice of the shared
         energy tensor (constraint mask + deterministic ``pareto_frontier``)."""
-        mask = constraint_mask(self._F, self._C, fit.T, w.constraints)
+        constraints = w.effective_constraints()
+        mask = constraint_mask(self._F, self._C, fit.T, constraints)
         if not mask.any():
             if self.on_infeasible == "raise":
                 raise ValueError("constraints admit no configuration on the grid")
-            mask = fit.T <= np.min(fit.T) * (1.0 + 1e-3)
+            mask = fastest_feasible_mask(self._F, self._C, fit.T, constraints)
         return [
             ParetoPoint(
                 frequency_ghz=float(self._F[idx]),

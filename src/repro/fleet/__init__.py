@@ -40,6 +40,14 @@ scheduling round is:
    remaining-energy saving clears the migration cost — with the abandoned
    joules and the migration charge honestly kept on the job's bill.
 
+With a ``scheduler.LookaheadPolicy`` configured, every planning round is
+*horizon-aware*: known future arrivals inside the horizon join the same
+batched ``pareto_many`` pass (their slack measured from their arrival via
+``Workload.earliest_start_s``), the joint assignment runs over (frontier
+point × node × start slot) options, and future placements are held as
+*tentative* reservations on the time-indexed capacity ledger — confirmed
+when the job launches, released and re-planned otherwise.
+
 ``python -m repro.fleet [--quick]`` runs the full comparison: the
 engine-scheduled fleet (negotiation + migration on by default) vs the
 PR-3 cheapest-first ``engine-fallback`` vs the same fleet under each
@@ -51,6 +59,7 @@ through ``characterize.workloads_from_artifacts`` into the same loop.
 
 from repro.fleet.cluster import (  # noqa: F401
     AppTerms,
+    CapacityProfile,
     FleetNode,
     NodePool,
     NodeSpec,
@@ -58,6 +67,7 @@ from repro.fleet.cluster import (  # noqa: F401
     family_key,
     make_pool,
     project_point,
+    time_eps,
 )
 from repro.fleet.negotiate import (  # noqa: F401
     NegotiationResult,
@@ -73,6 +83,7 @@ from repro.fleet.scheduler import (  # noqa: F401
     CompletedJob,
     FleetScheduler,
     Job,
+    LookaheadPolicy,
     MigrationPolicy,
     Placement,
     fleet_engine,
@@ -82,4 +93,5 @@ from repro.fleet.telemetry import (  # noqa: F401
     Observation,
     PreemptionRecord,
     TelemetryHub,
+    TentativeRecord,
 )

@@ -37,9 +37,15 @@ from repro.fleet.report import (
     build_comparison,
     run_engine_fleet,
     run_fleet_comparison,
+    run_myopic_reference,
     FleetReport,
 )
-from repro.fleet.scheduler import Job, MigrationPolicy, fleet_engine
+from repro.fleet.scheduler import (
+    Job,
+    LookaheadPolicy,
+    MigrationPolicy,
+    fleet_engine,
+)
 
 DRIFT_APP = "raytrace"
 DRIFT_FACTOR = 1.6
@@ -53,6 +59,7 @@ def build_jobs(
     input_sizes: Sequence[float] = (1.0, 2.0, 3.0),
     arrival_spacing_s: float = 220.0,
     slack_range=(1.4, 4.0),
+    burst: int = 1,
 ) -> List[Job]:
     """A deterministic trace: apps cycle, inputs/arrivals/slacks are seeded.
 
@@ -60,6 +67,14 @@ def build_jobs(
     (16 cores at f_max), so the tight end of ``slack_range`` forces the
     scheduler onto the pareto frontier while the loose end lets the energy
     optimum through.
+
+    ``burst > 1`` makes the trace bursty: arrivals land in groups of
+    ``burst`` jobs at the same instant, separated by ``burst`` × the mean
+    spacing — the known-future-arrival pattern the horizon-aware
+    scheduler (``--horizon``) exists for. Every burst mixes loose-deadline
+    long jobs with tight-deadline short ones, so a myopic round can
+    strand the cheap nodes on the long jobs just before the next burst
+    needs them.
     """
     rng = np.random.default_rng(seed)
     jobs = []
@@ -78,7 +93,11 @@ def build_jobs(
                 arrival_s=t,
             )
         )
-        t += float(rng.uniform(0.2, 1.0)) * arrival_spacing_s
+        if burst > 1:
+            if (i + 1) % burst == 0:
+                t += float(rng.uniform(0.4, 1.0)) * arrival_spacing_s * burst
+        else:
+            t += float(rng.uniform(0.2, 1.0)) * arrival_spacing_s
     return jobs
 
 
@@ -130,9 +149,11 @@ def run_artifact_fleet(
     drift_events,
     migration: Optional[MigrationPolicy],
     negotiate: bool,
+    lookahead: Optional[LookaheadPolicy] = None,
 ):
-    """Artifact traces: engine (negotiated) vs engine-fallback only —
-    stock governors cannot run apps outside the node profile table."""
+    """Artifact traces: engine (negotiated) vs engine-fallback (and, with
+    a horizon, engine-myopic) — stock governors cannot run apps outside
+    the node profile table."""
     pool = make_pool(n_nodes, seed=seed)
     stats, sched = run_engine_fleet(
         pool,
@@ -143,9 +164,24 @@ def run_artifact_fleet(
         char_cores=char_cores,
         negotiate=negotiate,
         migration=migration,
+        lookahead=lookahead,
     )
+    scenarios = {"engine": stats}
+    if lookahead is not None:
+        # what the horizon bought: same negotiation/migration, no lookahead
+        scenarios["engine-myopic"] = run_myopic_reference(
+            jobs,
+            n_nodes=n_nodes,
+            seed=seed,
+            drift_events=drift_events,
+            engine_kw=engine_kw,
+            char_freqs=char_freqs,
+            char_cores=char_cores,
+            negotiate=negotiate,
+            migration=migration,
+        )
     fpool = make_pool(n_nodes, seed=seed)
-    fb, _ = run_engine_fleet(
+    scenarios["engine-fallback"], _ = run_engine_fleet(
         fpool,
         jobs,
         drift_events=drift_events,
@@ -155,7 +191,7 @@ def run_artifact_fleet(
         name="engine-fallback",
     )
     report = FleetReport(
-        scenarios={"engine": stats, "engine-fallback": fb},
+        scenarios=scenarios,
         comparison=build_comparison(stats, [], jobs, sched.completed),
     )
     return report, sched
@@ -179,6 +215,23 @@ def main(argv: Optional[Sequence[str]] = None):
         action="store_true",
         help="disable negotiation + migration (the PR-3 cheapest-first "
         "scheduler) in the engine scenario",
+    )
+    ap.add_argument(
+        "--horizon",
+        type=float,
+        default=0.0,
+        metavar="SECONDS",
+        help="lookahead horizon: plan known future arrivals this far ahead "
+        "and hold capacity for them with tentative reservations (adds the "
+        "engine-myopic scenario for comparison; 0 disables)",
+    )
+    ap.add_argument(
+        "--burst",
+        type=int,
+        default=1,
+        metavar="K",
+        help="arrivals land in bursts of K jobs (default 1 = the smooth "
+        "trace); bursty traces are where --horizon pays",
     )
     ap.add_argument(
         "--migration-cost-j",
@@ -209,6 +262,9 @@ def main(argv: Optional[Sequence[str]] = None):
     migration = (
         None if args.fallback else MigrationPolicy(cost_j=args.migration_cost_j)
     )
+    lookahead = (
+        LookaheadPolicy(horizon_s=args.horizon) if args.horizon > 0 else None
+    )
 
     if args.artifacts:
         jobs = build_artifact_jobs(args.artifacts, seed=args.seed)
@@ -229,9 +285,12 @@ def main(argv: Optional[Sequence[str]] = None):
             drift_events=drift_events,
             migration=migration,
             negotiate=negotiate,
+            lookahead=lookahead,
         )
     else:
-        jobs = build_jobs(n_jobs, seed=args.seed, input_sizes=input_sizes)
+        jobs = build_jobs(
+            n_jobs, seed=args.seed, input_sizes=input_sizes, burst=args.burst
+        )
         drift_app = DRIFT_APP
         # the drift event lands mid-trace: enough history before it to
         # trust the model, enough jobs after it to notice and profit from
@@ -248,12 +307,16 @@ def main(argv: Optional[Sequence[str]] = None):
             char_cores=char_cores,
             negotiate=negotiate,
             migration=migration,
+            lookahead=lookahead,
             include_fallback=not args.fallback,
+            include_myopic=lookahead is not None,
         )
 
     n_rounds = len(sched.rounds)
     n_planned = sum(r.planned for r in sched.rounds)
     mode = "fallback" if args.fallback else "negotiate+migrate"
+    if lookahead is not None:
+        mode += f"+lookahead({args.horizon:.0f}s)"
     print(
         f"fleet: {args.nodes} nodes, {len(jobs)} jobs, {n_rounds} rounds "
         f"({n_planned} with planning, {mode}), drift {drift_app}"

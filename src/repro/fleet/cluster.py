@@ -18,6 +18,12 @@ module models that spread:
   injected *drift* (unannounced slowdown of one application family — the
   thing online re-characterization must catch) to every run, and keeps the
   reservation ledger used for free-core accounting and utilization.
+* ``CapacityProfile`` / the reservation ledger — time-indexed free-core
+  accounting over half-open ``[start, end)`` segments: interval capacity
+  queries (``free_cores(start, end)``), earliest-gap start-slot search,
+  and *tentative* reservations (lookahead holds that a later round
+  confirms or releases). All sim-clock comparisons share one relative
+  tolerance (``time_eps``).
 * ``NodePool`` — the fleet: free-core queries at a sim time, reservation
   bookkeeping, next-completion lookup, per-node utilization.
 * ``AppTerms`` — the bridge into ``core.engine``: a duck-typed
@@ -50,6 +56,46 @@ from repro.core.power import PAPER_COEFFS, PowerModel
 
 REFERENCE_FREQS: Tuple[float, ...] = tuple(float(f) for f in FREQ_GRID)
 
+# ---------------------------------------------------------------------------
+# time tolerance: ONE relative epsilon for every sim-clock comparison
+# ---------------------------------------------------------------------------
+
+# The seed code compared sim times with absolute epsilons (now + 1e-12 in
+# the ledger, now + 1e-6 in the event clamp). Absolute tolerances lose all
+# meaning at large clocks: the float64 ulp at t = 1e6 s is ~1e-10, so
+# t + 1e-12 == t and every "strictly later" test silently degenerates to
+# ">". One RELATIVE tolerance, shared by cluster.py and scheduler.py,
+# keeps the comparisons honest at any clock magnitude.
+TIME_EPS_REL = 1e-9
+
+
+def time_eps(t: float) -> float:
+    """The comparison tolerance at sim time ``t`` (seconds).
+
+    Relative (1e-9 of the clock magnitude, floored at 1e-9 s near zero):
+    always representable — strictly above the float64 ulp of ``t`` — so
+    ``t + time_eps(t) > t`` holds for any reachable sim time, which the
+    absolute epsilons of the seed code could not guarantee past t ~ 1e6 s.
+    """
+    return TIME_EPS_REL * max(abs(float(t)), 1.0)
+
+
+def segment_active_at(s: float, e: float, t: float, eps: float) -> bool:
+    """THE occupancy rule: does the half-open segment ``[s, e)`` occupy
+    instant ``t`` under tolerance ``eps`` (= ``time_eps(t)``)?
+
+    A segment starting at ``t`` counts, one ending at ``t`` does not, and
+    the tolerance is capped at HALF the segment's own duration so the
+    query tolerance (which grows with the sim clock) can never swallow a
+    whole short reservation. One definition — every occupancy test in the
+    ledger (``busy_at``, ``has_capacity``, the ``free_cores`` fast path)
+    must agree or the capacity views drift apart.
+    """
+    tol = 0.5 * (e - s)
+    if tol > eps:
+        tol = eps
+    return s <= t + tol and e > t + tol
+
 
 @dataclasses.dataclass(frozen=True)
 class NodeSpec:
@@ -72,10 +118,17 @@ class NodeSpec:
         )
 
     def snap_frequency(self, f: float) -> float:
-        """Lowest table frequency >= f (kernel relation_l); table max if none."""
-        table = np.asarray(self.freq_table, float)
-        idx = int(np.searchsorted(table, f - 1e-9))
-        return float(table[min(idx, len(table) - 1)])
+        """Lowest table frequency >= f (kernel relation_l); table max if none.
+
+        A plain scan of the (ascending, ~dozen-entry) table: this runs
+        hundreds of times per scheduling round in option projection, where
+        the numpy array build + searchsorted dispatch dominated the math.
+        """
+        f = f - 1e-9
+        for v in self.freq_table:
+            if v >= f:
+                return v
+        return self.freq_table[-1]
 
     def sockets(self, cores: int) -> int:
         return int(np.ceil(cores / CORES_PER_SOCKET))
@@ -134,10 +187,164 @@ def project_point(
 
 @dataclasses.dataclass
 class Reservation:
+    """One ledger entry over the half-open interval ``[start_s, end_s)``.
+
+    ``tentative`` marks a capacity hold made by the lookahead pass for a
+    job that has not launched yet (a known-future arrival, or a ready job
+    granted a later start slot). Tentative holds shape placement — they
+    keep other jobs from stranding the capacity — but they are not
+    executions: they never count as completions, never accrue utilization,
+    and each scheduling round either confirms them (the job launches) or
+    releases them (the round re-plans with fresh information).
+    """
+
     start_s: float
     end_s: float
     cores: int
     job_id: int
+    tentative: bool = False
+
+
+class CapacityProfile:
+    """Time-indexed free-core profile of one node.
+
+    The capacity query the horizon-aware scheduler actually needs is not
+    "how many cores are free *now*" but "how many cores are free over the
+    whole half-open interval ``[start, end)``" — a reservation that begins
+    inside the interval must count against it, and (the latent bug this
+    class fixes) a reservation that begins *after* ``now`` must NOT count
+    against an instantaneous query at ``now``.
+
+    Segments are half-open ``[start_s, end_s)``: a reservation ending at
+    ``t`` and one starting at ``t`` never overlap. All boundary
+    comparisons use the shared relative tolerance ``time_eps``.
+    """
+
+    def __init__(self, max_cores: int, segments: Optional[List[Tuple[float, float, int]]] = None):
+        self.max_cores = int(max_cores)
+        # (start_s, end_s, cores) triples; order is irrelevant
+        self.segments: List[Tuple[float, float, int]] = list(segments or [])
+        # memo for has_capacity on the CURRENT segment set — the slot
+        # negotiation re-probes identical windows across scan restarts;
+        # any mutation invalidates it
+        self._probe_cache: Dict[Tuple[float, float, int], bool] = {}
+
+    def copy(self) -> "CapacityProfile":
+        dup = CapacityProfile(self.max_cores, list(self.segments))
+        dup._probe_cache = dict(self._probe_cache)  # same segments: valid
+        return dup
+
+    def add(self, start_s: float, end_s: float, cores: int) -> None:
+        self.segments.append((float(start_s), float(end_s), int(cores)))
+        self._probe_cache.clear()
+
+    def remove(self, start_s: float, end_s: float, cores: int) -> None:
+        """Remove one matching segment (ValueError if absent)."""
+        self.segments.remove((float(start_s), float(end_s), int(cores)))
+        self._probe_cache.clear()
+
+    def busy_at(self, t: float) -> int:
+        """Cores reserved at instant ``t`` (half-open: a segment starting
+        at ``t`` counts, a segment ending at ``t`` does not).
+
+        One rule for every occupancy test: ``segment_active_at``.
+        """
+        eps = time_eps(t)
+        return sum(
+            c
+            for s, e, c in self.segments
+            if segment_active_at(s, e, t, eps)
+        )
+
+    def free_at(self, t: float) -> int:
+        return self.max_cores - self.busy_at(t)
+
+    def _sample_points(self, start_s: float, end_s: float) -> List[float]:
+        """THE interval sample rule: usage is piecewise constant, changing
+        only at segment starts, so any extremum over ``[start_s, end_s)``
+        is attained at ``start_s`` or a segment start strictly inside the
+        window. One definition — ``free_over`` and ``has_capacity`` must
+        sample identically or the exact minima and the yes/no probes
+        disagree about the same window."""
+        eps = time_eps(start_s)
+        eps_end = time_eps(end_s)
+        return [start_s] + [
+            s
+            for s, e, _ in self.segments
+            if s > start_s + eps and s < end_s - eps_end
+        ]
+
+    def free_over(self, start_s: float, end_s: Optional[float] = None) -> int:
+        """Minimum free cores over ``[start_s, end_s)`` (instantaneous
+        query at ``start_s`` when ``end_s`` is None)."""
+        if end_s is None:
+            return self.free_at(start_s)
+        return min(self.free_at(p) for p in self._sample_points(start_s, end_s))
+
+    def has_capacity(self, start_s: float, end_s: float, cores: int) -> bool:
+        """``free_over(start_s, end_s) >= cores`` with an early exit at the
+        first violating instant and a per-segment-set memo — the
+        negotiation hot path asks this yes/no question thousands of times
+        per round, often about the same window, and rarely needs the
+        exact minimum."""
+        key = (start_s, end_s, int(cores))
+        hit = self._probe_cache.get(key)
+        if hit is not None:
+            return hit
+        out = self._has_capacity(start_s, end_s, cores)
+        self._probe_cache[key] = out
+        return out
+
+    def _has_capacity(self, start_s: float, end_s: float, cores: int) -> bool:
+        # free_over's sampling + busy_at's occupancy rule, with an early
+        # exit at the first violating instant
+        budget = self.max_cores - int(cores)
+        if budget < 0:
+            return False
+        segs = self.segments
+        for t in self._sample_points(start_s, end_s):
+            t_eps = time_eps(t)
+            busy = 0
+            for s, e, c in segs:
+                if segment_active_at(s, e, t, t_eps):
+                    busy += c
+                    if busy > budget:
+                        return False
+        return True
+
+    def gap_candidates(self, start_min_s: float) -> List[float]:
+        """The only instants a new window could first fit: ``start_min_s``
+        plus every segment end after it (free cores only ever increase at
+        segment ends). One definition — ``earliest_gap`` and the
+        negotiator's slot enumeration must agree on slot semantics. The
+        same segment-duration-capped tolerance as ``busy_at``: a segment
+        shorter than the clock tolerance still contributes its end."""
+        eps = time_eps(start_min_s)
+        return sorted(
+            {start_min_s}
+            | {
+                e
+                for s, e, _ in self.segments
+                if e > start_min_s + min(eps, 0.5 * (e - s))
+            }
+        )
+
+    def earliest_gap(
+        self, start_min_s: float, duration_s: float, cores: int
+    ) -> Optional[float]:
+        """Earliest ``t >= start_min_s`` with ``cores`` free over the whole
+        ``[t, t + duration_s)`` window, or None when ``cores`` exceeds the
+        node."""
+        if cores > self.max_cores:
+            return None
+        for t in self.gap_candidates(start_min_s):
+            if self.free_over(t, t + duration_s) >= cores:
+                return float(t)
+        return None  # unreachable: the last candidate is after every segment
+
+    def valid(self) -> bool:
+        """True when no instant oversubscribes the node."""
+        return all(self.free_at(s) >= 0 for s, _, _ in self.segments)
 
 
 class FleetNode:
@@ -230,21 +437,118 @@ class FleetNode:
         cores = range(1, self.spec.max_cores + 1) if cores is None else cores
         return self.node.stress_grid(freqs, cores)
 
-    # -- reservation ledger ------------------------------------------------
+    # -- reservation ledger: the time-indexed capacity profile --------------
 
-    def free_cores(self, now: float, *, exclude_job: Optional[int] = None) -> int:
-        """Cores not reserved at sim time ``now``. ``exclude_job`` drops one
-        job's own reservation from the count — the migration re-plan asks
-        "where could this job go if it left its current slot?"."""
-        busy = sum(
-            r.cores
-            for r in self.reservations
-            if r.end_s > now + 1e-12 and r.job_id != exclude_job
+    def capacity_profile(
+        self,
+        *,
+        exclude_job: Optional[int] = None,
+        include_tentative: bool = True,
+    ) -> CapacityProfile:
+        """The node's free-core profile as a ``CapacityProfile``.
+
+        ``exclude_job`` drops one job's own reservations from the profile —
+        the migration re-plan asks "where could this job go if it left its
+        current slot?". ``include_tentative=False`` sees only confirmed
+        (executing) reservations.
+        """
+        return CapacityProfile(
+            self.spec.max_cores,
+            [
+                (r.start_s, r.end_s, r.cores)
+                for r in self.reservations
+                if r.job_id != exclude_job
+                and (include_tentative or not r.tentative)
+            ],
         )
-        return self.spec.max_cores - busy
 
-    def reserve(self, start_s: float, end_s: float, cores: int, job_id: int) -> None:
-        self.reservations.append(Reservation(start_s, end_s, cores, job_id))
+    def free_cores(
+        self,
+        start_s: float,
+        end_s: Optional[float] = None,
+        *,
+        exclude_job: Optional[int] = None,
+        include_tentative: bool = True,
+    ) -> int:
+        """Cores free over the half-open interval ``[start_s, end_s)``
+        (instantaneous at ``start_s`` when ``end_s`` is None).
+
+        The interval form fixes the seed ledger's latent bug: a
+        reservation with ``start_s`` in the future used to count as busy
+        *now*; half-open interval accounting only charges a query for
+        reservations it actually overlaps.
+        """
+        if end_s is None:
+            # instantaneous fast path: this runs per node per job per
+            # round in every placement/migration/FIFO loop — a direct sum
+            # with CapacityProfile.busy_at's exact tolerance rule, no
+            # profile materialization
+            t = float(start_s)
+            eps = time_eps(t)
+            busy = sum(
+                r.cores
+                for r in self.reservations
+                if r.job_id != exclude_job
+                and (include_tentative or not r.tentative)
+                and segment_active_at(r.start_s, r.end_s, t, eps)
+            )
+            return self.spec.max_cores - busy
+        return self.capacity_profile(
+            exclude_job=exclude_job, include_tentative=include_tentative
+        ).free_over(start_s, end_s)
+
+    def earliest_gap(
+        self,
+        start_min_s: float,
+        duration_s: float,
+        cores: int,
+        *,
+        exclude_job: Optional[int] = None,
+    ) -> Optional[float]:
+        """Earliest start ``>= start_min_s`` with ``cores`` free for the
+        whole ``duration_s`` window — the lookahead start-slot query."""
+        return self.capacity_profile(exclude_job=exclude_job).earliest_gap(
+            start_min_s, duration_s, cores
+        )
+
+    def reserve(
+        self,
+        start_s: float,
+        end_s: float,
+        cores: int,
+        job_id: int,
+        *,
+        tentative: bool = False,
+    ) -> None:
+        """Reserve ``cores`` over ``[start_s, end_s)``. ``tentative=True``
+        is the lookahead hold: a future round either confirms it
+        (``confirm_reservations``, when the job launches) or releases it
+        (``release_tentative``, when the round re-plans)."""
+        self.reservations.append(
+            Reservation(start_s, end_s, cores, job_id, tentative=tentative)
+        )
+
+    def confirm_reservations(self, job_id: int) -> int:
+        """Promote ``job_id``'s tentative holds to confirmed reservations.
+        Returns the number of reservations confirmed."""
+        n = 0
+        for r in self.reservations:
+            if r.job_id == job_id and r.tentative:
+                r.tentative = False
+                n += 1
+        return n
+
+    def release_tentative(self, job_id: Optional[int] = None) -> int:
+        """Drop tentative holds (all of them, or one job's). Returns the
+        number released. Confirmed reservations are never touched."""
+        kept = [
+            r
+            for r in self.reservations
+            if not (r.tentative and (job_id is None or r.job_id == job_id))
+        ]
+        released = len(self.reservations) - len(kept)
+        self.reservations = kept
+        return released
 
     def truncate_reservation(self, job_id: int, now: float) -> int:
         """Preemption hook: end ``job_id``'s active reservation at ``now``.
@@ -255,18 +559,21 @@ class FleetNode:
         """
         freed = 0
         for r in self.reservations:
-            if r.job_id == job_id and r.end_s > now + 1e-12:
+            if r.job_id == job_id and r.end_s > now + time_eps(now):
                 r.end_s = now
                 freed += r.cores
         return freed
 
     def utilization(self, horizon_s: float) -> float:
-        """Busy core-seconds / capacity core-seconds over [0, horizon]."""
+        """Busy core-seconds / capacity core-seconds over [0, horizon].
+        Tentative holds are plans, not executions — only confirmed
+        reservations accrue utilization."""
         if horizon_s <= 0:
             return 0.0
         busy = sum(
             (min(r.end_s, horizon_s) - min(r.start_s, horizon_s)) * r.cores
             for r in self.reservations
+            if not r.tentative
         )
         return busy / (self.spec.max_cores * horizon_s)
 
@@ -298,13 +605,21 @@ class NodePool:
         return max(n.free_cores(now) for n in self.nodes)
 
     def next_completion(self, now: float) -> Optional[float]:
+        """The next CONFIRMED reservation end after ``now`` — tentative
+        holds are plans, not executions, so they are never completions."""
         ends = [
             r.end_s
             for n in self.nodes
             for r in n.reservations
-            if r.end_s > now + 1e-12
+            if not r.tentative and r.end_s > now + time_eps(now)
         ]
         return min(ends) if ends else None
+
+    def release_tentative(self, job_id: Optional[int] = None) -> int:
+        """Drop tentative holds fleet-wide (the start of every lookahead
+        round: last round's provisional future placements are re-planned
+        with fresh information). Returns the number released."""
+        return sum(n.release_tentative(job_id) for n in self.nodes)
 
     def apply_drift(self, app: str, factor: float) -> None:
         """Fleet-wide drift of one application family (e.g. its dataset

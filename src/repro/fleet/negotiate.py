@@ -46,19 +46,43 @@ The protocol per scheduling round:
 
 ``NegotiationResult`` keeps both the seed and the final assignment so the
 round log (and the tests) can audit exactly what negotiation bought.
+
+**The horizon-aware slot mode** (``negotiate(..., profiles=...)``): when
+the scheduler plans a lookahead round, per-node capacity is a TIME
+profile (``cluster.CapacityProfile``, confirmed reservations over
+half-open intervals) and the option space grows a start-slot axis —
+options become (frontier point × node × start slot), each slot an
+earliest feasible gap on the node's profile. The seed and local search
+mirror the scalar protocol: the search never worsens the seed's
+(deferred, misses, joules), and a round with no future jobs seeds
+exactly the myopic greedy — pure-ready rounds cannot be worse than
+myopic. Mixed rounds are deliberately EDF-flavored (a tighter-deadline
+future arrival may claim contested capacity before a looser ready job;
+the fleet-level lookahead <= myopic ordering is enforced empirically by
+the report's ``engine-myopic`` gate and the stranding-trace tests).
+Every capacity check is an interval query against the working profiles.
+An assigned option with a future ``start_s`` is a *tentative*
+placement: the scheduler holds the window on the ledger without
+launching.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.fleet.cluster import NodePool, project_point
+from repro.fleet.cluster import CapacityProfile, NodePool, project_point, time_eps
 
 
 @dataclasses.dataclass(frozen=True)
 class Option:
-    """One candidate assignment: a frontier point projected onto a node."""
+    """One candidate assignment: a frontier point projected onto a node.
+
+    In the horizon-aware (slot) mode an option also carries ``start_s`` —
+    the absolute sim time the job would begin — so the option space is
+    (frontier point × node × start slot). The myopic mode leaves
+    ``start_s`` at the round time implicitly (every option starts now).
+    """
 
     point_idx: int  # index into the job's frontier (fastest point first)
     node_idx: int
@@ -67,6 +91,11 @@ class Option:
     time_s: float  # node-projected run time, s
     energy_j: float  # node-projected energy, J
     meets_deadline: bool
+    start_s: float = 0.0  # absolute start slot (slot mode), sim seconds
+
+    @property
+    def end_s(self) -> float:
+        return self.start_s + self.time_s
 
 
 @dataclasses.dataclass
@@ -103,6 +132,13 @@ class Negotiator:
             deferred/miss improvements are always taken.
         max_moves: hard cap on accepted moves per round (the objective is
             strictly decreasing, so this is a backstop, not a tuning knob).
+        max_slots: in the horizon-aware mode, how many start slots each
+            (frontier point, node) pair contributes to the option set —
+            the earliest feasible slots on the node's capacity profile.
+        max_exchange_targets: in the slot mode, how many (cheapest) target
+            windows a stressed job tries per exchange scan — every failed
+            target costs a full helper search over interval queries, and
+            targets past the first few cheapest windows almost never win.
     """
 
     def __init__(
@@ -112,11 +148,15 @@ class Negotiator:
         *,
         energy_margin: float = 0.02,
         max_moves: int = 500,
+        max_slots: int = 3,
+        max_exchange_targets: int = 4,
     ):
         self.pool = pool
         self.power = power_model
         self.energy_margin = float(energy_margin)
         self.max_moves = int(max_moves)
+        self.max_slots = int(max_slots)
+        self.max_exchange_targets = int(max_exchange_targets)
 
     # -- option enumeration -------------------------------------------------
 
@@ -317,6 +357,387 @@ class Negotiator:
             freed_total += freed
         return list(moved.items())
 
+    # -- the horizon-aware (slot) mode --------------------------------------
+    #
+    # When the scheduler plans a lookahead round, capacity is no longer one
+    # scalar per node: future reservations make it a time profile, and the
+    # option space grows a start-slot axis. The slotted methods below mirror
+    # the scalar seed/search — a round with NO future jobs seeds exactly the
+    # myopic greedy, and the search never worsens the seed's lexkey; in a
+    # MIXED round the deadline-ordered seed is deliberately EDF-flavored
+    # (a tighter-deadline future job may claim contested capacity before a
+    # looser ready job) — with all capacity checks going through per-node
+    # ``CapacityProfile``s (half-open intervals) instead of core counters.
+
+    @staticmethod
+    def _occupy(profiles: List[CapacityProfile], o: Option) -> None:
+        profiles[o.node_idx].add(o.start_s, o.end_s, o.cores)
+
+    @staticmethod
+    def _vacate(profiles: List[CapacityProfile], o: Option) -> None:
+        profiles[o.node_idx].remove(o.start_s, o.end_s, o.cores)
+
+    @staticmethod
+    def _fits(profiles: List[CapacityProfile], o: Option) -> bool:
+        return profiles[o.node_idx].has_capacity(o.start_s, o.end_s, o.cores)
+
+    def _fits_without(
+        self,
+        profiles: List[CapacityProfile],
+        o: Option,
+        vacated: Optional[Option],
+    ) -> bool:
+        """Does ``o`` fit once ``vacated`` (the assignment being moved
+        away) is off the books? Only touches the profile when the two
+        share a node — a vacate/occupy pair invalidates the profile's
+        probe memo, and the scans below ask mostly cross-node questions."""
+        if vacated is not None and vacated.node_idx == o.node_idx:
+            self._vacate(profiles, vacated)
+            ok = self._fits(profiles, o)
+            self._occupy(profiles, vacated)
+            return ok
+        return self._fits(profiles, o)
+
+    def _slotted_options(
+        self,
+        terms,
+        frontier,
+        profiles: Sequence[CapacityProfile],
+        start_min: float,
+        slack: float,
+        now: float,
+    ) -> List[Option]:
+        """(frontier point × node × start slot): each pair contributes its
+        ``max_slots`` earliest feasible slots on the node's BASE profile
+        (confirmed reservations only — working feasibility is re-checked
+        against the round's evolving assignment during seed/search).
+
+        Known single-round limitation: slots created by the round's OWN
+        holds are not enumerated, so two future jobs competing for the
+        same idle window cannot stack within one round — the loser defers
+        and stacks on the NEXT round, when the winner's hold has become a
+        confirmed reservation whose end is a gap candidate. Dynamic
+        re-enumeration against the working profiles is the ROADMAP's
+        multi-horizon candidate."""
+        out: List[Option] = []
+        for k, pt in enumerate(frontier):
+            for m, node in enumerate(self.pool):
+                prof = profiles[m]
+                if pt.chips > prof.max_cores:
+                    continue
+                f_snap, t_exp, e_exp = project_point(
+                    node.spec, self.power, terms, pt.chips,
+                    pt.frequency_ghz, pt.step_time_s,
+                )
+                n_slots = 0
+                for t in prof.gap_candidates(start_min):
+                    # has_capacity, not free_over: memoized on the (never
+                    # mutated) base profile and shared across jobs whose
+                    # frontier points ask about the same window
+                    if not prof.has_capacity(t, t + t_exp, pt.chips):
+                        continue
+                    out.append(
+                        Option(
+                            point_idx=k,
+                            node_idx=m,
+                            cores=pt.chips,
+                            frequency_ghz=f_snap,
+                            time_s=t_exp,
+                            energy_j=e_exp,
+                            meets_deadline=(
+                                slack > 0 and (t - now) + t_exp <= slack
+                            ),
+                            start_s=float(t),
+                        )
+                    )
+                    n_slots += 1
+                    if n_slots >= self.max_slots:
+                        break
+        return out
+
+    def _seed_slotted(
+        self,
+        jobs,
+        options: List[List[Option]],
+        frontiers,
+        profiles: Sequence[CapacityProfile],
+        slacks: Sequence[float],
+        arrivals: Sequence[float],
+        now: float,
+    ) -> List[Optional[Option]]:
+        """Deadline-order greedy over the slotted options.
+
+        Ready jobs walk three passes: (1) launch-now options meeting the
+        deadline — the myopic cheapest-first walk (verbatim myopic when
+        the round has no future jobs; in a mixed round an
+        earlier-deadline future job's hold may already occupy contested
+        capacity — EDF semantics, deliberate); (2) a later start slot
+        that still meets the deadline (a tentative hold beats locking in
+        a miss); (3) launch now and eat the miss. Future jobs get pass
+        (2) only — a job that cannot be made feasible yet simply stays
+        deferred and is re-planned when it arrives.
+        """
+        n = len(jobs)
+        assign: List[Optional[Option]] = [None] * n
+        work = [p.copy() for p in profiles]
+        eps = time_eps(now)
+        # options arrive pre-sorted by (energy, start, node, point): within
+        # one frontier point the first option passing the filters IS the
+        # minimum the scalar seed's min() would pick — group once, then
+        # every per-point walk is an early-exit scan
+        by_point: List[Dict[int, List[Option]]] = []
+        for opts in options:
+            groups: Dict[int, List[Option]] = {}
+            for o in opts:
+                groups.setdefault(o.point_idx, []).append(o)
+            by_point.append(groups)
+        order = sorted(range(n), key=lambda i: (jobs[i].deadline_s, jobs[i].job_id))
+        for i in order:
+            ready = arrivals[i] <= now + eps
+            if ready:
+                passes = (
+                    [("now", True), ("any", True), ("now", False)]
+                    if slacks[i] > 0
+                    else [("now", False)]
+                )
+            else:
+                passes = [("any", True)] if slacks[i] > 0 else []
+            chosen = None
+            for mode, require_deadline in passes:
+                # frontier is fastest-first: reversed = cheapest-first walk
+                for k in reversed(range(len(frontiers[i]))):
+                    for o in by_point[i].get(k, ()):
+                        if require_deadline and not o.meets_deadline:
+                            continue
+                        if mode == "now" and o.start_s > now + eps:
+                            continue
+                        if self._fits(work, o):
+                            chosen = o
+                            break
+                    if chosen is not None:
+                        break
+                if chosen is not None:
+                    break
+            assign[i] = chosen
+            if chosen is not None:
+                self._occupy(work, chosen)
+        return assign
+
+    def _try_single_moves_slotted(
+        self, jobs, options, assign, work: List[CapacityProfile]
+    ) -> Optional[Tuple[int, Option]]:
+        """Slot-mode single reassignment: same improvement rules as the
+        scalar scan, feasibility checked on the working profiles with the
+        job's own hold vacated first. ``options`` lists arrive pre-sorted
+        cheapest-first, and the (cheap) improvement test runs BEFORE the
+        (interval-query) capacity probe — the scan is the round's hot
+        loop."""
+        order = sorted(range(len(jobs)), key=lambda i: jobs[i].job_id)
+        for i in order:
+            cur = assign[i]
+            for o in options[i]:
+                if o == cur:
+                    continue
+                if cur is not None:
+                    miss_delta = (
+                        int(not o.meets_deadline) - int(not cur.meets_deadline)
+                    )
+                    if miss_delta > 0:
+                        continue
+                    if miss_delta == 0 and not (
+                        o.energy_j < cur.energy_j * (1.0 - self.energy_margin)
+                    ):
+                        continue
+                if self._fits_without(work, o, cur):
+                    return (i, o)
+        return None
+
+    def _try_exchange_slotted(
+        self, jobs, options, assign, work: List[CapacityProfile]
+    ) -> Optional[List[Tuple[int, Option]]]:
+        """Slot-mode slack exchange: free the target window's missing cores
+        by relocating jobs whose holds overlap it (possibly to other slots
+        or nodes), helpers ranked by Δjoules per core of relief."""
+        stressed = [
+            i
+            for i in range(len(jobs))
+            if assign[i] is None or not assign[i].meets_deadline
+        ]
+        stressed.sort(key=lambda i: (jobs[i].deadline_s, jobs[i].job_id))
+        for i in stressed:
+            cur = assign[i]
+            # options are pre-sorted cheapest-first; each failed target
+            # costs a full helper search, so the scan is capped at the
+            # cheapest few deadline-meeting windows
+            targets = [o for o in options[i] if o.meets_deadline][
+                : self.max_exchange_targets
+            ]
+            for o in targets:
+                # cheap pre-check on the working profiles (vacate/restore,
+                # no copies): targets a plain single move covers are
+                # skipped before paying for a probe copy
+                if self._fits_without(work, o, cur):
+                    continue  # a plain single move covers this case
+                if cur is not None and cur.node_idx == o.node_idx:
+                    self._vacate(work, cur)
+                    free_window = work[o.node_idx].free_over(o.start_s, o.end_s)
+                    self._occupy(work, cur)
+                else:
+                    free_window = work[o.node_idx].free_over(o.start_s, o.end_s)
+                # drainability bound: if relocating EVERY movable hold
+                # overlapping the window still cannot free enough cores,
+                # the full helper search is guaranteed to fail — skip it
+                drainable = sum(
+                    a.cores
+                    for j, a in enumerate(assign)
+                    if j != i
+                    and a is not None
+                    and a.node_idx == o.node_idx
+                    and a.start_s < o.end_s
+                    and a.end_s > o.start_s
+                )
+                if free_window + drainable < o.cores:
+                    continue
+                probe = [p.copy() for p in work]
+                if cur is not None:
+                    self._vacate(probe, cur)
+                helpers = self._free_window_slotted(
+                    jobs, options, assign, probe, o, skip=i
+                )
+                if helpers is not None:
+                    return helpers + [(i, o)]
+        return None
+
+    def _free_window_slotted(
+        self, jobs, options, assign, probe: List[CapacityProfile], target: Option, *, skip
+    ) -> Optional[List[Tuple[int, Option]]]:
+        """Relocate jobs off the target window until it fits, cheapest
+        Δjoules per relieved core first. ``probe`` already has the stressed
+        job's own hold vacated; it is mutated as helpers move. Returns the
+        move list, or None when the window cannot be drained.
+
+        Candidates are collected with CHEAP tests only (relief, miss
+        rule), sorted by score, and capacity-probed in that order — the
+        first feasible candidate IS the min-score feasible one, so the
+        expensive interval queries stop as soon as a helper is found."""
+        moved: Dict[int, Option] = {}
+        while not self._fits(probe, target):
+            cands = []
+            for j in range(len(jobs)):
+                cur = assign[j]
+                if (
+                    j == skip
+                    or j in moved
+                    or cur is None
+                    or cur.node_idx != target.node_idx
+                    or cur.start_s >= target.end_s
+                    or cur.end_s <= target.start_s
+                ):
+                    continue  # only holds overlapping the target window help
+                for alt in options[j]:
+                    overlaps_alt = (
+                        alt.node_idx == target.node_idx
+                        and alt.start_s < target.end_s
+                        and alt.end_s > target.start_s
+                    )
+                    relief = cur.cores - (alt.cores if overlaps_alt else 0)
+                    if relief <= 0:
+                        continue
+                    if cur.meets_deadline and not alt.meets_deadline:
+                        continue  # helpers never create a new miss
+                    cost = alt.energy_j - cur.energy_j
+                    score = (
+                        cost / relief, jobs[j].job_id,
+                        alt.energy_j, alt.start_s, alt.node_idx, alt.point_idx,
+                    )
+                    cands.append((score, j, alt))
+            cands.sort(key=lambda c: c[0])
+            chosen = None
+            for _, j, alt in cands:
+                cur = assign[j]
+                if self._fits_without(probe, alt, cur):
+                    self._vacate(probe, cur)
+                    self._occupy(probe, alt)
+                    chosen = (j, alt)
+                    break
+            if chosen is None:
+                return None
+            moved[chosen[0]] = chosen[1]
+        return list(moved.items())
+
+    def _negotiate_slotted(
+        self,
+        jobs,
+        terms_list,
+        frontiers,
+        profiles: Sequence[CapacityProfile],
+        slacks,
+        arrivals,
+        now: float,
+        search: bool,
+    ) -> NegotiationResult:
+        options = [
+            self._slotted_options(t, fr, profiles, max(now, arr), s, now)
+            for t, fr, arr, s in zip(terms_list, frontiers, arrivals, slacks)
+        ]
+        # one deterministic cheapest-first order, shared by every scan
+        # (the seed takes explicit minima, so sorting is order-safe)
+        for opts in options:
+            opts.sort(
+                key=lambda o: (o.energy_j, o.start_s, o.node_idx, o.point_idx)
+            )
+        seed = self._seed_slotted(
+            jobs, options, frontiers, profiles, slacks, arrivals, now
+        )
+        assign = list(seed)
+        work = [p.copy() for p in profiles]
+        for a in assign:
+            if a is not None:
+                self._occupy(work, a)
+        n_moves = n_exchanges = 0
+        while search and n_moves + n_exchanges < self.max_moves:
+            single = self._try_single_moves_slotted(jobs, options, assign, work)
+            if single is not None:
+                i, o = single
+                if assign[i] is not None:
+                    self._vacate(work, assign[i])
+                self._occupy(work, o)
+                assign[i] = o
+                n_moves += 1
+                continue
+            exchange = self._try_exchange_slotted(jobs, options, assign, work)
+            if exchange is not None:
+                before = NegotiationResult.projected(assign)
+                rollback = {i: assign[i] for i, _ in exchange}
+                for i, o in exchange:
+                    if assign[i] is not None:
+                        self._vacate(work, assign[i])
+                    self._occupy(work, o)
+                    assign[i] = o
+                after = NegotiationResult.projected(assign)
+                if after >= before or not all(p.valid() for p in work):
+                    # defensive: a helper chain that failed to improve (or
+                    # oversubscribed a window) is undone; the scan is done
+                    for i, prev in rollback.items():
+                        self._vacate(work, assign[i])
+                        if prev is not None:
+                            self._occupy(work, prev)
+                        assign[i] = prev
+                    break
+                n_exchanges += 1
+                continue
+            break
+        # a hard raise, not an assert: the never-oversubscribe invariant
+        # must survive `python -O` (the scheduler reserves real windows
+        # from this assignment)
+        if not all(p.valid() for p in work):
+            raise RuntimeError(
+                "slot negotiation oversubscribed a capacity window"
+            )
+        return NegotiationResult(
+            assignments=assign, seed=seed, n_moves=n_moves, n_exchanges=n_exchanges
+        )
+
     # -- entry point --------------------------------------------------------
 
     def negotiate(
@@ -326,20 +747,51 @@ class Negotiator:
         frontiers: Sequence[Sequence],
         free_cores: Sequence[int],
         slacks: Sequence[float],
+        *,
+        now: float = 0.0,
+        arrivals: Optional[Sequence[float]] = None,
+        profiles: Optional[Sequence[CapacityProfile]] = None,
+        search: bool = True,
     ) -> NegotiationResult:
         """Negotiate one round's joint assignment.
 
         Args:
-            jobs: the round's pending jobs (deadline_s in sim seconds).
+            jobs: the round's jobs (deadline_s in sim seconds) — pending
+                now and, in the horizon-aware mode, known future arrivals.
             terms_list: per-job believed surfaces (for frequency snapping).
             frontiers: per-job deterministic frontiers from ``pareto_many``.
-            free_cores: per-node free cores at the round's sim time.
-            slacks: per-job remaining deadline slack in seconds.
+            free_cores: per-node free cores at the round's sim time
+                (ignored when ``profiles`` is given).
+            slacks: per-job remaining deadline slack in seconds from
+                ``now`` (a future job's own start delay is re-derived from
+                its arrival).
+            now: the round's sim time (slot mode), seconds.
+            arrivals: per-job arrival times (slot mode), absolute seconds.
+            profiles: per-node ``CapacityProfile``s of CONFIRMED
+                reservations. When given, the negotiation runs in the
+                horizon-aware slot mode: options are (frontier point ×
+                node × start slot) and all capacity checks are interval
+                queries on the profiles.
+            search: False replays only the greedy seed (the scheduler's
+                non-negotiated lookahead path); True runs the local search.
 
         Returns:
             ``NegotiationResult`` aligned with ``jobs``; ``None`` entries
-            stay pending and are re-planned next round.
+            stay pending and are re-planned in a later round. In slot mode
+            an assigned option with ``start_s > now`` is a *tentative*
+            placement — the scheduler reserves the window without
+            launching.
         """
+        if profiles is not None:
+            arrivals = (
+                [getattr(j, "arrival_s", 0.0) for j in jobs]
+                if arrivals is None
+                else list(arrivals)
+            )
+            return self._negotiate_slotted(
+                jobs, terms_list, frontiers, profiles, slacks, arrivals,
+                now, search,
+            )
         options = [
             self._options(t, fr, free_cores, s)
             for t, fr, s in zip(terms_list, frontiers, slacks)
@@ -348,7 +800,7 @@ class Negotiator:
         assign = list(seed)
         remaining = self._remaining(assign, free_cores)
         n_moves = n_exchanges = 0
-        for _ in range(self.max_moves):
+        while search and n_moves + n_exchanges < self.max_moves:
             single = self._try_single_moves(jobs, options, assign, remaining)
             if single is not None:
                 i, o = single
@@ -374,7 +826,9 @@ class Negotiator:
                 n_exchanges += 1
                 continue
             break
-        assert min(self._remaining(assign, free_cores)) >= 0
+        # same hard invariant as the slotted path: must survive python -O
+        if min(self._remaining(assign, free_cores), default=0) < 0:
+            raise RuntimeError("negotiation oversubscribed a node's cores")
         return NegotiationResult(
             assignments=assign, seed=seed, n_moves=n_moves, n_exchanges=n_exchanges
         )

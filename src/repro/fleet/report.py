@@ -28,11 +28,12 @@ from repro.core.evaluate import (
     PlanRun,
     make_governor,
 )
-from repro.fleet.cluster import NodePool, make_pool
+from repro.fleet.cluster import NodePool, make_pool, time_eps
 from repro.fleet.negotiate import Negotiator
 from repro.fleet.scheduler import (
     FleetScheduler,
     Job,
+    LookaheadPolicy,
     MigrationPolicy,
     apply_due_events,
     fleet_engine,
@@ -62,6 +63,10 @@ class ScenarioStats:
     preemptions: int = 0
     migration_energy_j: float = 0.0
     negotiation_exchanges: int = 0
+    # horizon-aware lookahead (0 for every other scenario): the configured
+    # horizon and how many tentative capacity holds its rounds placed
+    lookahead_horizon_s: float = 0.0
+    tentative_reservations: int = 0
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -117,12 +122,12 @@ def run_governor_fleet(
         ei = apply_due_events(pool, events, ei, now)
         still_pending = []
         for job in pending:
-            if job.arrival_s > now + 1e-12:
+            if job.arrival_s > now + time_eps(now):
                 still_pending.append(job)
                 continue
             placed = False
             for node in pool:
-                free = node.free_cores(now)
+                free = node.free_cores(now)  # instantaneous ledger query
                 if free <= 0:
                     continue
                 gov = make_governor(governor_name, node.spec.freq_table)
@@ -132,7 +137,7 @@ def run_governor_fleet(
                 job_energy[job.job_id] = result.energy_j
                 job_time[job.job_id] = result.time_s
                 finishes[job.job_id] = finish
-                misses += finish > job.deadline_s + 1e-9
+                misses += finish > job.deadline_s + time_eps(job.deadline_s)
                 placed = True
                 break
             if not placed:
@@ -166,6 +171,7 @@ def run_engine_fleet(
     char_cores=None,
     negotiate: bool = False,
     migration: Optional[MigrationPolicy] = None,
+    lookahead: Optional[LookaheadPolicy] = None,
     name: str = "engine",
 ) -> Tuple[ScenarioStats, FleetScheduler]:
     """The planned fleet: one ``FleetScheduler`` over the whole trace.
@@ -173,8 +179,10 @@ def run_engine_fleet(
     ``negotiate=True`` places rounds via fleet-wide pareto negotiation;
     ``migration`` (a ``MigrationPolicy``) enables the preemptive
     rebalancing pass — both off reproduces the PR-3 cheapest-first
-    scheduler exactly. Per-job energies include preempted partial
-    segments and migration charges.
+    scheduler exactly. ``lookahead`` (a ``LookaheadPolicy``) makes every
+    round horizon-aware: known future arrivals join the batched pass and
+    hold capacity with tentative reservations. Per-job energies include
+    preempted partial segments and migration charges.
     """
     engine = engine if engine is not None else fleet_engine(pool)
     sched = FleetScheduler(
@@ -185,6 +193,7 @@ def run_engine_fleet(
         char_cores=char_cores,
         negotiator=Negotiator(pool, engine.power) if negotiate else None,
         migration=migration,
+        lookahead=lookahead,
     )
     completed = sched.run(jobs, drift_events=drift_events)
     stats = ScenarioStats(
@@ -207,8 +216,41 @@ def run_engine_fleet(
         preemptions=sched.telemetry.n_preemptions,
         migration_energy_j=sched.telemetry.migration_energy_j,
         negotiation_exchanges=sum(r.n_exchanges for r in sched.rounds),
+        lookahead_horizon_s=lookahead.horizon_s if lookahead else 0.0,
+        tentative_reservations=sched.telemetry.n_tentative_reservations,
     )
     return stats, sched
+
+
+def run_myopic_reference(
+    jobs: Sequence[Job],
+    *,
+    n_nodes: int,
+    seed: int,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    engine_kw: Optional[dict] = None,
+    char_freqs=None,
+    char_cores=None,
+    negotiate: bool = False,
+    migration: Optional[MigrationPolicy] = None,
+) -> ScenarioStats:
+    """The ``engine-myopic`` comparison row: identical trace, pool seeds
+    and negotiation/migration configuration, NO lookahead — what the
+    horizon bought. One definition, shared by the governor comparison and
+    the artifact-intake report."""
+    mpool = make_pool(n_nodes, seed=seed)
+    stats, _ = run_engine_fleet(
+        mpool,
+        jobs,
+        drift_events=drift_events,
+        engine=fleet_engine(mpool, **dict(engine_kw or {})),
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+        negotiate=negotiate,
+        migration=migration,
+        name="engine-myopic",
+    )
+    return stats
 
 
 # ---------------------------------------------------------------------------
@@ -274,11 +316,18 @@ class FleetReport:
             if self.comparison.runs  # artifact traces have no governor runs
             else ""
         )
+        lookahead = (
+            f"; lookahead horizon: {self.engine.lookahead_horizon_s:.0f} s, "
+            f"tentative holds: {self.engine.tentative_reservations}"
+            if self.engine.lookahead_horizon_s > 0
+            else ""
+        )
         lines.append(
             ratios
             + f"pareto deadline fallbacks: {self.engine.pareto_fallbacks}; "
             f"negotiation exchanges: {self.engine.negotiation_exchanges}; "
             f"migration overhead: {self.engine.migration_energy_j / 1e3:.1f} kJ"
+            + lookahead
         )
         return "\n".join(lines)
 
@@ -356,7 +405,9 @@ def run_fleet_comparison(
     char_cores=None,
     negotiate: bool = False,
     migration: Optional[MigrationPolicy] = None,
+    lookahead: Optional[LookaheadPolicy] = None,
     include_fallback: bool = False,
+    include_myopic: bool = False,
 ) -> Tuple[FleetReport, FleetScheduler]:
     """Run the same trace under the engine and every governor.
 
@@ -364,10 +415,13 @@ def run_fleet_comparison(
     so the ground truth (power skews, noise streams, drift) is identical
     and the only difference is who decides (f, p, node).
 
-    ``negotiate``/``migration`` configure the engine scenario;
-    ``include_fallback`` adds an ``engine-fallback`` scenario — the PR-3
-    cheapest-first scheduler with neither — so the report shows what the
-    negotiation + rebalancing bought on the identical trace.
+    ``negotiate``/``migration``/``lookahead`` configure the engine
+    scenario; ``include_fallback`` adds an ``engine-fallback`` scenario —
+    the PR-3 cheapest-first scheduler with none of the three — and
+    ``include_myopic`` (meaningful when ``lookahead`` is set) adds an
+    ``engine-myopic`` scenario — same negotiation + migration but no
+    horizon — so the report shows what each layer bought on the identical
+    trace.
     """
     engine_kw = dict(engine_kw or {})
     pool = make_pool(n_nodes, seed=seed)
@@ -381,8 +435,21 @@ def run_fleet_comparison(
         char_cores=char_cores,
         negotiate=negotiate,
         migration=migration,
+        lookahead=lookahead,
     )
     scenarios = {"engine": engine_stats}
+    if include_myopic and lookahead is not None:
+        scenarios["engine-myopic"] = run_myopic_reference(
+            jobs,
+            n_nodes=n_nodes,
+            seed=seed,
+            drift_events=drift_events,
+            engine_kw=engine_kw,
+            char_freqs=char_freqs,
+            char_cores=char_cores,
+            negotiate=negotiate,
+            migration=migration,
+        )
     if include_fallback:
         fpool = make_pool(n_nodes, seed=seed)
         fb_stats, _ = run_engine_fleet(

@@ -71,6 +71,7 @@ from repro.fleet.cluster import (
     NodePool,
     family_key,
     project_point,
+    time_eps,
 )
 from repro.fleet.negotiate import Negotiator
 from repro.fleet.telemetry import (
@@ -78,6 +79,7 @@ from repro.fleet.telemetry import (
     Observation,
     PreemptionRecord,
     TelemetryHub,
+    TentativeRecord,
 )
 
 
@@ -156,6 +158,25 @@ class RoundLog:
     n_moves: int = 0  # negotiation single reassignments
     n_exchanges: int = 0  # negotiation multi-job slack exchanges
     n_migrated: int = 0  # in-flight jobs preempted + relaunched post-refit
+    n_future: int = 0  # known-future arrivals planned by the lookahead pass
+    n_tentative: int = 0  # tentative reservations placed this round
+
+
+@dataclasses.dataclass(frozen=True)
+class LookaheadPolicy:
+    """Horizon-aware planning: how far ahead the round looks.
+
+    Every planning round also plans the known FUTURE arrivals inside
+    ``horizon_s`` (in the same single batched ``pareto_many`` pass, their
+    slack measured from their arrival via ``Workload.earliest_start_s``)
+    and places them as *tentative* reservations — capacity holds that
+    keep the current round's ready jobs from stranding the nodes the
+    near-future burst will need. Each round releases the previous round's
+    holds and re-plans them with fresh information; a hold converts to a
+    real (confirmed) reservation when its job launches.
+    """
+
+    horizon_s: float = 600.0  # how far ahead arrivals are planned, seconds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,7 +206,7 @@ def apply_due_events(
     pool's truth; returns the index of the first still-future event. Shared
     by the engine scheduler and the governor-FIFO baseline so both
     scenarios shift at identical sim times."""
-    while ei < len(events) and events[ei][0] <= now + 1e-12:
+    while ei < len(events) and events[ei][0] <= now + time_eps(now):
         _, app, factor = events[ei]
         pool.apply_drift(app, factor)
         ei += 1
@@ -202,16 +223,20 @@ def next_event_time(
     """The next sim time anything can change: a job completion, a future
     arrival, or a scheduled drift event. ``None`` means nothing is left to
     wait for (an unplaceable remainder). One definition — the engine and
-    baseline simulation loops must advance their clocks identically."""
+    baseline simulation loops must advance their clocks identically. All
+    comparisons use the shared relative tolerance ``cluster.time_eps``, so
+    the advance survives arbitrarily large sim clocks (an absolute epsilon
+    underflows the float64 ulp past t ~ 1e6 s)."""
+    eps = time_eps(now)
     nexts = []
     completion = pool.next_completion(now)
     if completion is not None:
         nexts.append(completion)
-    arrivals = [j.arrival_s for j in pending if j.arrival_s > now + 1e-12]
+    arrivals = [j.arrival_s for j in pending if j.arrival_s > now + eps]
     if arrivals:
         nexts.append(min(arrivals))
     if ei < len(events):
-        nexts.append(max(events[ei][0], now + 1e-6))
+        nexts.append(max(events[ei][0], now + eps))
     return min(nexts) if nexts else None
 
 
@@ -265,6 +290,7 @@ class FleetScheduler:
         char_cores: Optional[Sequence[int]] = None,
         negotiator: Optional[Negotiator] = None,
         migration: Optional[MigrationPolicy] = None,
+        lookahead: Optional[LookaheadPolicy] = None,
     ):
         """Args:
             pool / engine / telemetry: the fleet, its (single, shared)
@@ -276,6 +302,10 @@ class FleetScheduler:
                 per-job cheapest-first fallback.
             migration: when set, a material drift re-fit triggers the
                 preemptive-rebalancing pass over in-flight jobs.
+            lookahead: when set, every planning round also plans the
+                known future arrivals inside ``lookahead.horizon_s`` in
+                the same batched engine pass and holds capacity for them
+                with tentative reservations (horizon-aware mode).
         """
         self.pool = pool
         self.engine = engine
@@ -289,6 +319,15 @@ class FleetScheduler:
         )
         self.negotiator = negotiator
         self.migration = migration
+        self.lookahead = lookahead
+        # the lookahead seed machinery is the Negotiator's slot mode; a
+        # scheduler without a configured negotiator still needs it to
+        # replay the greedy seed over (point × node × slot) options
+        self._slot_negotiator = (
+            negotiator
+            if negotiator is not None
+            else Negotiator(pool, engine.power)
+        )
         self.rounds: List[RoundLog] = []
         self.completed: List[CompletedJob] = []
         self._pending: List[Job] = []
@@ -315,13 +354,35 @@ class FleetScheduler:
 
     def _workload(self, job: Job, now: float, free_cap: int) -> Workload:
         slack = job.deadline_s - now
+        # A job already past its deadline gets max_time_s = 0.0, NOT None:
+        # the empty time mask routes it through the engine's
+        # on_infeasible="fastest" path (fastest point that still honors
+        # the core cap). The seed passed None, which planned a late job
+        # *unconstrained* — the leisurely energy optimum, maximizing the
+        # overshoot instead of cutting it.
         return Workload(
             arch=job.app,
             terms=self._terms_key(job),
             constraints=Constraints(
                 max_cores=free_cap,
-                max_time_s=slack if slack > 0 else None,
+                max_time_s=slack if slack > 0 else 0.0,
             ),
+        )
+
+    def _future_workload(self, job: Job, now: float, max_cores: int) -> Workload:
+        """The lookahead view of a known future arrival: slack is still
+        measured from ``now`` (one time origin per round) but the engine
+        shifts it by ``earliest_start_s`` — the job cannot start before it
+        arrives, so its frontier is masked by ``deadline - arrival``."""
+        slack = job.deadline_s - now
+        return Workload(
+            arch=job.app,
+            terms=self._terms_key(job),
+            constraints=Constraints(
+                max_cores=max_cores,
+                max_time_s=slack if slack > 0 else 0.0,
+            ),
+            earliest_start_s=job.arrival_s - now,
         )
 
     # -- one scheduling round ---------------------------------------------
@@ -348,13 +409,34 @@ class FleetScheduler:
            assignment; otherwise it is ``plan_many`` feeding the per-job
            cheapest-first fallback. Launch what fits.
 
+        With a ``LookaheadPolicy``, step 4 is horizon-aware: the previous
+        round's tentative holds are released, the known future arrivals
+        inside the horizon join the SAME batched ``pareto_many`` pass
+        (slack shifted to their arrival via ``Workload.earliest_start_s``),
+        and the joint assignment runs over (frontier point × node × start
+        slot) options — ready jobs whose slot is ``now`` launch; every
+        other assignment becomes a tentative reservation.
+
         Returns the round's ``RoundLog`` (also appended to ``rounds``).
         Energies throughout are joules, times seconds, frequencies GHz.
         """
         self._ingest(now)
+        eps = time_eps(now)
+        if self.lookahead is not None:
+            # last round's holds are provisional by contract: release and
+            # re-plan them with this round's fresh capacity + telemetry
+            self.pool.release_tentative()
         refit = self._refresh_stale(now)
         n_migrated = self._maybe_migrate(now, refit)
-        pending_now = [j for j in self._pending if j.arrival_s <= now + 1e-12]
+        pending_now = [j for j in self._pending if j.arrival_s <= now + eps]
+        future: List[Job] = []
+        if self.lookahead is not None:
+            horizon = now + self.lookahead.horizon_s
+            future = [
+                j
+                for j in self._pending
+                if now + eps < j.arrival_s <= horizon
+            ]
         cap = self.pool.max_free_cores(now)
         planned = bool(pending_now) and cap > 0
         log = RoundLog(
@@ -365,30 +447,133 @@ class FleetScheduler:
             # only rounds that actually placed through the Negotiator count
             negotiated=planned and self.negotiator is not None,
             n_migrated=n_migrated,
+            n_future=len(future) if planned else 0,
         )
         if log.planned:
-            workloads = [self._workload(j, now, cap) for j in pending_now]
-            if self.negotiator is not None:
-                self._place_negotiated(pending_now, workloads, now, log)
+            if self.lookahead is not None:
+                self._place_lookahead(pending_now, future, now, log)
             else:
-                plans = self.engine.plan_many(workloads)  # THE one batched call
-                order = sorted(
-                    range(len(pending_now)),
-                    key=lambda i: (
-                        pending_now[i].deadline_s,
-                        pending_now[i].job_id,
-                    ),
-                )
-                for i in order:
-                    placement = self._place(
-                        pending_now[i], workloads[i], plans[i], now
+                workloads = [self._workload(j, now, cap) for j in pending_now]
+                if self.negotiator is not None:
+                    self._place_negotiated(pending_now, workloads, now, log)
+                else:
+                    plans = self.engine.plan_many(workloads)  # THE one batched call
+                    order = sorted(
+                        range(len(pending_now)),
+                        key=lambda i: (
+                            pending_now[i].deadline_s,
+                            pending_now[i].job_id,
+                        ),
                     )
-                    if placement is not None:
-                        self._launch(placement)
-                        self._pending.remove(pending_now[i])
-                        log.n_placed += 1
+                    for i in order:
+                        placement = self._place(
+                            pending_now[i], workloads[i], plans[i], now
+                        )
+                        if placement is not None:
+                            self._launch(placement)
+                            self._pending.remove(pending_now[i])
+                            log.n_placed += 1
         self.rounds.append(log)
         return log
+
+    def _place_lookahead(
+        self,
+        ready: List[Job],
+        future: List[Job],
+        now: float,
+        log: RoundLog,
+    ) -> None:
+        """The horizon-aware round: ready jobs AND known future arrivals in
+        ONE batched ``pareto_many``, then the slot-mode joint assignment
+        over (frontier point × node × start slot).
+
+        Ready jobs assigned a launch-now slot run immediately; assignments
+        with a future start (a ready job waiting for a better window, or a
+        future arrival) become tentative reservations — capacity holds the
+        next round confirms (by launching) or releases (by re-planning).
+
+        By construction: the search never worsens the seed's (deferred,
+        misses, projected joules) over the round's planned set, and a
+        round with NO future arrivals seeds exactly the myopic greedy —
+        pure-ready rounds cannot be worse than myopic. A mixed round is
+        deliberately EDF-flavored: a tighter-deadline future arrival may
+        out-rank a looser ready job for contested capacity (the horizon
+        exists to make that trade); the fleet-level lookahead <= myopic
+        ordering is enforced empirically by the comparison report's
+        ``engine-myopic`` gate and the stranding-trace tests.
+        """
+        jobs = ready + future
+        cap = self.pool.max_free_cores(now)
+        biggest = max(n.spec.max_cores for n in self.pool)
+        # Ready jobs keep the MYOPIC core cap (max free cores at `now`),
+        # deliberately: the slot seed walks each ready job's frontier
+        # exactly as the myopic greedy would, and that only replays
+        # myopic if the frontier is IDENTICAL (a wider frontier can drop
+        # capped-frontier points as dominated). The cost is that a ready
+        # job's later start slots are limited to <= cap cores; a deadline
+        # squeezed by that cap resolves next round, when the job re-plans
+        # against the then-free capacity — exactly as the myopic
+        # scheduler would. Future jobs carry no myopic twin, so they plan
+        # against the biggest node outright.
+        workloads = [self._workload(j, now, cap) for j in ready] + [
+            self._future_workload(j, now, biggest) for j in future
+        ]
+        frontiers = self.engine.pareto_many(workloads)  # THE one batched call
+        profiles = [
+            n.capacity_profile(include_tentative=False) for n in self.pool
+        ]
+        result = self._slot_negotiator.negotiate(
+            jobs,
+            [w.terms for w in workloads],
+            frontiers,
+            (),  # scalar free-core counts: unused in slot mode
+            [j.deadline_s - now for j in jobs],
+            now=now,
+            arrivals=[j.arrival_s for j in jobs],
+            profiles=profiles,
+            search=self.negotiator is not None,
+        )
+        log.n_moves = result.n_moves
+        log.n_exchanges = result.n_exchanges
+        eps = time_eps(now)
+        for i, opt in enumerate(result.assignments):
+            if opt is None:
+                continue  # deferred: replanned in the next round's batch
+            job = jobs[i]
+            node = self.pool[opt.node_idx]
+            if i < len(ready) and opt.start_s <= now + eps:
+                placement = Placement(
+                    job=job,
+                    node=node.name,
+                    frequency_ghz=opt.frequency_ghz,
+                    cores=opt.cores,
+                    start_s=now,
+                    predicted_time_s=opt.time_s,
+                    predicted_energy_j=opt.energy_j,
+                    pareto_fallback=opt.point_idx != len(frontiers[i]) - 1,
+                    negotiated=self.negotiator is not None,
+                )
+                self._launch(placement)
+                self._pending.remove(job)
+                log.n_placed += 1
+            else:
+                # a capacity hold, not an execution: the job stays pending
+                node.reserve(
+                    opt.start_s, opt.end_s, opt.cores, job.job_id,
+                    tentative=True,
+                )
+                self.telemetry.record_tentative(
+                    TentativeRecord(
+                        time_s=now,
+                        family=(job.app, job.input_size),
+                        job_id=job.job_id,
+                        node=node.name,
+                        start_s=opt.start_s,
+                        end_s=opt.end_s,
+                        cores=opt.cores,
+                    )
+                )
+                log.n_tentative += 1
 
     def _place_negotiated(
         self,
@@ -560,7 +745,7 @@ class FleetScheduler:
                 placement=placement,
                 result=result,
                 finish_s=finish,
-                met_deadline=finish <= job.deadline_s + 1e-9,
+                met_deadline=finish <= job.deadline_s + time_eps(job.deadline_s),
                 prior_energy_j=prior_energy_j,
                 prior_time_s=prior_time_s,
                 migrations=migrations,
@@ -569,7 +754,7 @@ class FleetScheduler:
 
     def _ingest(self, now: float) -> None:
         """Stream finished runs (finish time <= now) into telemetry."""
-        due = [c for c in self._finish_queue if c.finish_s <= now + 1e-9]
+        due = [c for c in self._finish_queue if c.finish_s <= now + time_eps(now)]
         due_ids = {id(c) for c in due}
         self._finish_queue = [
             c for c in self._finish_queue if id(c) not in due_ids
@@ -714,7 +899,7 @@ class FleetScheduler:
             job = c.placement.job
             fam = (job.app, job.input_size)
             if (
-                c.finish_s <= now + 1e-9
+                c.finish_s <= now + time_eps(now)
                 or fam not in material
                 or c.migrations >= pol.max_migrations_per_job
             ):
@@ -749,9 +934,11 @@ class FleetScheduler:
                     constraints=Constraints(
                         max_cores=free_cap,
                         # the frontier speaks full-run times; the remainder
-                        # only runs remaining_frac of them
+                        # only runs remaining_frac of them. slack <= 0 is
+                        # the same past-deadline case as _workload: 0.0
+                        # (fastest-feasible), never None (unconstrained)
                         max_time_s=(
-                            slack / remaining_frac if slack > 0 else None
+                            slack / remaining_frac if slack > 0 else 0.0
                         ),
                     ),
                 )
@@ -881,6 +1068,7 @@ class FleetScheduler:
             if nxt is None:
                 break  # unplaceable remainder: nothing left to wait for
             now = nxt
+        self.pool.release_tentative()  # holds are plans; the sim is over
         self._ingest(float("inf"))
         return self.completed
 

@@ -48,6 +48,26 @@ class Observation:
 
 
 @dataclasses.dataclass(frozen=True)
+class TentativeRecord:
+    """One lookahead capacity hold, as placed (times in sim seconds).
+
+    The horizon-aware round reserves ``[start_s, end_s)`` on ``node`` for
+    a job that has not launched yet (a known future arrival, or a ready
+    job granted a later start slot). Logged so reports can audit how much
+    of the round's placement was shaped by the horizon rather than by the
+    jobs physically present.
+    """
+
+    time_s: float  # the round's sim time
+    family: Family
+    job_id: int
+    node: str
+    start_s: float  # the held window, half-open [start_s, end_s)
+    end_s: float
+    cores: int
+
+
+@dataclasses.dataclass(frozen=True)
 class PreemptionRecord:
     """One preemptive migration, as accounted (all energies in joules).
 
@@ -115,6 +135,7 @@ class TelemetryHub:
         )
         self.refreshes: List[Tuple[float, Family]] = []  # (sim time, family)
         self.preemptions: List[PreemptionRecord] = []
+        self.tentatives: List[TentativeRecord] = []
 
     def record(self, obs: Observation) -> None:
         self.observations.append(obs)
@@ -123,6 +144,10 @@ class TelemetryHub:
     def record_preemption(self, rec: PreemptionRecord) -> None:
         """Log one preemptive migration (the scheduler's rebalancing pass)."""
         self.preemptions.append(rec)
+
+    def record_tentative(self, rec: TentativeRecord) -> None:
+        """Log one lookahead capacity hold (the horizon-aware round)."""
+        self.tentatives.append(rec)
 
     def stale_families(self) -> List[Family]:
         return self.detector.stale()
@@ -152,6 +177,10 @@ class TelemetryHub:
     @property
     def n_preemptions(self) -> int:
         return len(self.preemptions)
+
+    @property
+    def n_tentative_reservations(self) -> int:
+        return len(self.tentatives)
 
     @property
     def migration_energy_j(self) -> float:

@@ -89,9 +89,9 @@ import benchmarks.run as bench_main
 
 for mod, flags in (
     (fleet_main, ("--quick", "--artifacts", "--fallback", "--json",
-                  "--nodes")),
+                  "--nodes", "--horizon", "--burst")),
     (eval_main, ("--quick", "--objective")),
-    (bench_main, ("--quick", "--only")),
+    (bench_main, ("--quick", "--only", "--append-trajectory")),
 ):
     buf = io.StringIO()
     with contextlib.redirect_stdout(buf):
@@ -141,5 +141,68 @@ def test_bench_registry_names_are_stable():
         assert set(bench_run.BENCHES) >= {
             "paper", "engine", "svr_fit", "fleet", "kernels",
         }
+    finally:
+        sys.path.remove(REPO)
+
+
+def test_verify_script_pins_the_tier1_commands():
+    """`scripts/verify.sh` is the one verification gate: it must run the
+    documented tier-1 command and the fast loop, verbatim — if either
+    command changes, the README, this test and the script must move
+    together."""
+    path = os.path.join(REPO, "scripts", "verify.sh")
+    assert os.path.exists(path), "scripts/verify.sh is the verification gate"
+    assert os.access(path, os.X_OK), "verify.sh must be executable"
+    with open(path) as f:
+        text = f.read()
+    assert 'python -m pytest -x -q -m "not slow"' in text  # the fast loop
+    assert re.search(r"exec python -m pytest -x -q$", text, flags=re.M), (
+        "verify.sh lost the tier-1 command"
+    )
+    assert 'PYTHONPATH="src' in text  # same path setup the README documents
+
+
+def test_bench_trajectory_appends_one_entry_per_run(tmp_path, monkeypatch):
+    """`benchmarks/run.py --append-trajectory` must append one dated entry
+    per run (the run-over-run perf record the in-place per-bench JSON
+    files cannot provide) — two runs, two entries, payloads intact."""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks import common, run as bench_run
+
+        monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+        calls = []
+
+        def fake_bench(quick):
+            calls.append(quick)
+            common.save_json("fake", {"speedup": 2.0 + len(calls)})
+
+        monkeypatch.setattr(bench_run, "BENCHES", {"fake": fake_bench})
+        bench_run.run_selected("fake", quick=True, append_trajectory=True)
+        bench_run.run_selected("fake", quick=True, append_trajectory=True)
+
+        import json
+
+        with open(tmp_path / "trajectory.json") as f:
+            trajectory = json.load(f)
+        assert len(trajectory) == 2
+        for i, entry in enumerate(trajectory):
+            assert entry["quick"] is True
+            assert "run_at" in entry
+            assert entry["results"]["fake"]["speedup"] == 3.0 + i
+        # the per-bench file still lands next to the trajectory
+        assert (tmp_path / "fake.json").exists()
+        # and a run WITHOUT the flag must not grow the trajectory
+        bench_run.run_selected("fake", quick=True)
+        with open(tmp_path / "trajectory.json") as f:
+            assert len(json.load(f)) == 2
+        # a corrupt history (interrupted write) must not brick the record:
+        # the evidence moves aside and a fresh history starts
+        with open(tmp_path / "trajectory.json", "w") as f:
+            f.write('[{"run_at": "tru')
+        bench_run.run_selected("fake", quick=True, append_trajectory=True)
+        with open(tmp_path / "trajectory.json") as f:
+            assert len(json.load(f)) == 1
+        assert (tmp_path / "trajectory.json.corrupt").exists()
     finally:
         sys.path.remove(REPO)

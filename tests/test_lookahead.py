@@ -1,0 +1,511 @@
+"""Horizon-aware fleet (PR 5 tentpole) + the deadline/epsilon bug sweep.
+
+The load-bearing invariants:
+  * the reservation ledger is a time-indexed capacity profile over
+    half-open ``[start, end)`` intervals — a reservation starting in the
+    future is NOT busy now (the latent bug the profile fixes), interval
+    queries see everything they overlap, and tentative holds shape
+    placement without ever counting as executions;
+  * a lookahead round plans ready jobs AND known future arrivals in ONE
+    batched ``pareto_many`` pass and is never worse than the myopic round
+    (the slot seed's launch-now pass replays the myopic greedy verbatim);
+  * a job already past its deadline is planned on the engine's
+    fastest-feasible path, not at the leisurely unconstrained optimum;
+  * sim-clock comparisons use ONE relative tolerance (``time_eps``), so
+    the simulation survives clocks past t = 1e7 s where the seed's
+    absolute epsilons underflow the float64 ulp;
+  * the engine and baseline-governor simulation loops advance their
+    clocks identically — both use ``next_event_time`` output verbatim.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import Constraints, Workload
+from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
+from repro.fleet import (
+    CapacityProfile,
+    FleetNode,
+    FleetScheduler,
+    Job,
+    LookaheadPolicy,
+    Negotiator,
+    NodePool,
+    NodeSpec,
+    fleet_engine,
+    make_pool,
+    time_eps,
+)
+from repro.fleet import report as report_mod
+from repro.fleet import scheduler as scheduler_mod
+from repro.fleet.report import run_governor_fleet
+
+QUICK_FREQS = tuple(float(f) for f in FREQ_GRID[::3])
+QUICK_CORES = (1, 2, 4, 8, 16, 24, 32)
+QUICK_ENGINE_KW = dict(freqs=QUICK_FREQS, cores=QUICK_CORES, noise=0.01, seed=0)
+
+
+def quick_scheduler(pool=None, **kw):
+    pool = pool if pool is not None else make_pool(4, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    return FleetScheduler(
+        pool,
+        engine,
+        char_freqs=QUICK_FREQS[::2],
+        char_cores=(1, 8, 16, 32),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the time-indexed capacity profile (the ledger refactor)
+# ---------------------------------------------------------------------------
+
+
+def test_future_reservation_is_not_busy_now():
+    """THE latent bug of the flat ledger: a reservation with a future
+    start used to count as busy at ``now``."""
+    node = FleetNode(NodeSpec("n", max_cores=32))
+    node.reserve(500.0, 600.0, 20, job_id=1)  # starts in the future
+    assert node.free_cores(0.0) == 32  # not busy yet (the bug fix)
+    assert node.free_cores(500.0) == 12
+    assert node.free_cores(599.0) == 12
+    assert node.free_cores(600.0) == 32  # half-open: free again at end
+
+
+def test_interval_queries_see_overlapping_reservations():
+    node = FleetNode(NodeSpec("n", max_cores=32))
+    node.reserve(100.0, 200.0, 24, job_id=1)
+    # instantaneous at 0: free; over [0, 150): the reservation overlaps
+    assert node.free_cores(0.0) == 32
+    assert node.free_cores(0.0, 150.0) == 8
+    assert node.free_cores(0.0, 100.0) == 32  # half-open: touching is free
+    assert node.free_cores(200.0, 300.0) == 32
+    # min over the interval, not the value at its start
+    node.reserve(160.0, 180.0, 8, job_id=2)
+    assert node.free_cores(150.0, 300.0) == 0
+
+
+def test_short_reservations_stay_visible_at_large_clocks():
+    """The query tolerance grows with the sim clock (time_eps(1e7) is
+    ~0.01 s); it must never swallow a whole segment — a reservation
+    shorter than the tolerance still occupies its window, or the ledger
+    could double-book a node."""
+    prof = CapacityProfile(16)
+    t0 = 1.0e7
+    prof.add(t0, t0 + 1e-3, 16)  # far shorter than time_eps(1e7)
+    assert 1e-3 < time_eps(t0) * 1.0  # the scenario is genuinely sub-eps
+    assert prof.busy_at(t0) == 16
+    assert prof.free_over(t0, t0 + 1e-3) == 0
+    assert prof.earliest_gap(t0, 1e-3, 16) > t0  # must wait, not overlap
+    # and a double-booking attempt is caught by the validity check
+    prof.add(t0, t0 + 1e-3, 16)
+    assert not prof.valid()
+
+
+def test_capacity_profile_earliest_gap():
+    prof = CapacityProfile(32)
+    prof.add(0.0, 100.0, 24)
+    prof.add(100.0, 300.0, 30)
+    # 8 cores fit right away; 16 must wait for t=100's release... which
+    # still holds 30, so they wait until t=300
+    assert prof.earliest_gap(0.0, 50.0, 8) == 0.0
+    assert prof.earliest_gap(0.0, 50.0, 16) == 300.0
+    # a window longer than the first idle stretch skips to the next gap
+    prof2 = CapacityProfile(32)
+    prof2.add(50.0, 100.0, 32)
+    assert prof2.earliest_gap(0.0, 40.0, 16) == 0.0
+    assert prof2.earliest_gap(0.0, 80.0, 16) == 100.0
+    assert prof2.earliest_gap(0.0, 10.0, 64) is None  # exceeds the node
+
+
+def test_tentative_holds_confirm_release_and_never_complete():
+    node = FleetNode(NodeSpec("n", max_cores=32))
+    pool = NodePool([node])
+    node.reserve(0.0, 100.0, 8, job_id=1)
+    node.reserve(50.0, 200.0, 16, job_id=2, tentative=True)
+    # holds shape capacity ...
+    assert node.free_cores(60.0) == 8
+    assert node.free_cores(60.0, include_tentative=False) == 24
+    # ... but are never executions: not a completion, not utilization
+    assert pool.next_completion(0.0) == pytest.approx(100.0)
+    assert pool.next_completion(150.0) is None
+    assert node.utilization(100.0) == pytest.approx(800.0 / 3200.0)
+    # release drops only tentative holds; confirm promotes them
+    assert pool.release_tentative() == 1
+    assert node.free_cores(60.0) == 24
+    node.reserve(50.0, 200.0, 16, job_id=2, tentative=True)
+    assert node.confirm_reservations(2) == 1
+    assert pool.next_completion(150.0) == pytest.approx(200.0)
+    assert pool.release_tentative() == 0  # nothing tentative left
+
+
+# ---------------------------------------------------------------------------
+# bugfix: past-deadline jobs plan fastest-feasible, not unconstrained
+# ---------------------------------------------------------------------------
+
+
+def test_past_deadline_job_plans_fastest_feasible_point():
+    """A job already past its deadline used to get ``max_time_s=None`` —
+    the leisurely unconstrained energy optimum. It must instead ride the
+    ``on_infeasible="fastest"`` path: the grid's fastest point that still
+    honors the core cap."""
+    sched = quick_scheduler()
+    engine = sched.engine
+    late = Job(0, "raytrace", 1.0, deadline_s=-100.0, arrival_s=0.0)
+    w = sched._workload(late, now=0.0, free_cap=32)
+    assert w.constraints.max_time_s == 0.0  # empty time mask, not None
+    plan = engine.plan(w)
+    fit = engine._fits[w.key]
+    assert plan.step_time_s <= float(fit.T.min()) * (1.0 + 1e-3 + 1e-9)
+    # the unconstrained optimum is materially slower — the old behaviour
+    relaxed = engine.plan(Workload(arch=w.arch, terms=w.terms))
+    assert relaxed.step_time_s > plan.step_time_s * 1.05
+
+    # and the cap survives the fallback: fastest point on <= 8 cores
+    w8 = Workload(
+        arch=w.arch,
+        terms=w.terms,
+        constraints=Constraints(max_cores=8, max_time_s=0.0),
+    )
+    plan8 = engine.plan(w8)
+    assert plan8.chips <= 8
+    capped = np.where(engine._C <= 8, fit.T, np.inf)
+    assert plan8.step_time_s <= float(capped.min()) * (1.0 + 1e-3 + 1e-9)
+
+
+def test_past_deadline_job_runs_fast_end_to_end():
+    """The placement of an already-late job carries the fastest-feasible
+    plan's configuration (not the leisurely unconstrained optimum the old
+    ``max_time_s=None`` produced)."""
+    sched = quick_scheduler()
+    late = Job(0, "raytrace", 1.0, deadline_s=1.0, arrival_s=0.0)
+    (done,) = sched.run([late])
+    engine = sched.engine
+    fast_plan = engine.plan(sched._workload(late, now=0.0, free_cap=32))
+    relaxed = engine.plan(
+        Workload(arch=late.app, terms=sched._terms_key(late))
+    )
+    assert done.placement.cores == fast_plan.chips
+    assert not done.met_deadline  # it was late on arrival; still counted
+    # and the fastest plan is genuinely a different, faster configuration
+    assert fast_plan.step_time_s < relaxed.step_time_s
+    assert done.result.time_s < relaxed.step_time_s * 1.30  # any node skew
+
+
+# ---------------------------------------------------------------------------
+# bugfix: relative time tolerance at large sim clocks
+# ---------------------------------------------------------------------------
+
+
+def test_time_eps_is_relative_and_always_representable():
+    for t in (0.0, 1.0, 1e3, 1e7, 1e9, 1e12):
+        assert t + time_eps(t) > t  # the comparison can always resolve
+    # the seed's absolute epsilons underflow the ulp at large clocks:
+    assert 1e7 + 1e-12 == 1e7  # "strictly later" silently degenerated
+    assert 1e12 + 1e-6 == 1e12  # even the event clamp underflowed
+    assert 1e12 + time_eps(1e12) > 1e12
+
+
+@pytest.mark.slow
+def test_simulation_survives_clocks_past_1e7_seconds():
+    """Drive the sim almost four months in: arrivals, deadlines, drift and
+    completions all beyond t = 1e7 s must behave exactly like a t = 0
+    trace (the seed's absolute epsilons could not tell times apart up
+    there)."""
+    base = 1.0e7
+    apps = sorted(PROFILES)
+    offsets = (0.0, 150.0, 300.0, 450.0, 600.0, 750.0)
+    jobs = [
+        Job(
+            i,
+            apps[i % len(apps)],
+            1.0,
+            deadline_s=base + off + PROFILES[apps[i % len(apps)]].time(F_MAX, 16, 1.0) * 3.0,
+            arrival_s=base + off,
+        )
+        for i, off in enumerate(offsets)
+    ]
+    sched = quick_scheduler()
+    completed = sched.run(
+        jobs, drift_events=[(base + 200.0, "raytrace", 1.6)]
+    )
+    assert len(completed) == len(jobs)
+    assert all(c.finish_s > base for c in completed)
+    assert sched.makespan_s > base
+    # the clock genuinely advanced round over round (no stall/no spin)
+    nows = [r.now for r in sched.rounds]
+    assert all(b > a for a, b in zip(nows, nows[1:]))
+    assert len(sched.rounds) < 50  # a stalled eps would burn max_rounds
+    # mirror trace at t=0: the large-clock run makes the same decisions
+    jobs0 = [
+        Job(
+            j.job_id, j.app, j.input_size,
+            deadline_s=j.deadline_s - base, arrival_s=j.arrival_s - base,
+        )
+        for j in jobs
+    ]
+    sched0 = quick_scheduler()
+    completed0 = sched0.run(
+        jobs0, drift_events=[(200.0, "raytrace", 1.6)]
+    )
+    cfg = [
+        (c.placement.node, c.placement.cores, c.placement.frequency_ghz)
+        for c in sorted(completed, key=lambda c: c.placement.job.job_id)
+    ]
+    cfg0 = [
+        (c.placement.node, c.placement.cores, c.placement.frequency_ghz)
+        for c in sorted(completed0, key=lambda c: c.placement.job.job_id)
+    ]
+    assert cfg == cfg0
+
+
+# ---------------------------------------------------------------------------
+# clock-advance parity: one next_event_time, used verbatim by both loops
+# ---------------------------------------------------------------------------
+
+
+def _random_trace(rng, n_jobs):
+    apps = sorted(PROFILES)
+    jobs, t = [], 0.0
+    for i in range(n_jobs):
+        app = apps[int(rng.integers(len(apps)))]
+        est = PROFILES[app].time(F_MAX, 16, 1.0)
+        jobs.append(
+            Job(
+                i, app, 1.0,
+                deadline_s=t + est * float(rng.uniform(1.5, 4.0)),
+                arrival_s=t,
+            )
+        )
+        t += float(rng.uniform(0.0, 400.0))
+    events = sorted(
+        (float(rng.uniform(0.0, t + 1.0)), apps[int(rng.integers(len(apps)))],
+         float(rng.uniform(1.1, 1.8)))
+        for _ in range(int(rng.integers(1, 3)))
+    )
+    return jobs, events
+
+
+@pytest.mark.slow
+def test_engine_and_governor_loops_advance_clocks_identically(monkeypatch):
+    """Property-style trial sweep: on randomized arrival/drift traces,
+    BOTH simulation loops (engine scheduler and baseline-governor FIFO)
+    must consume ``next_event_time`` verbatim — every round's ``now`` is
+    exactly the previous call's return, strictly increasing, with drift
+    events applied by the shared ``apply_due_events`` before each round.
+    This pins the drift-event ordering the one-definition docstring
+    promises."""
+    orig = scheduler_mod.next_event_time  # the ONE definition, pre-patch
+    assert report_mod.next_event_time is orig  # both loops bind it
+    sink = {"calls": []}
+
+    def recording(pool, pending, events, ei, now):
+        out = orig(pool, pending, events, ei, now)
+        sink["calls"].append((now, out))
+        return out
+
+    monkeypatch.setattr(scheduler_mod, "next_event_time", recording)
+    monkeypatch.setattr(report_mod, "next_event_time", recording)
+
+    rng = np.random.default_rng(1234)
+    for trial in range(3):
+        jobs, events = _random_trace(rng, n_jobs=int(rng.integers(3, 6)))
+
+        sink["calls"] = eng_calls = []
+        sched = quick_scheduler(pool=make_pool(3, seed=trial))
+        sched.run(jobs, drift_events=events)
+
+        sink["calls"] = gov_calls = []
+        run_governor_fleet(
+            make_pool(3, seed=trial), jobs, "performance",
+            drift_events=events,
+        )
+
+        for calls in (eng_calls, gov_calls):
+            assert calls, "the loop must consult next_event_time"
+            # first round fires at t=0
+            assert calls[0][0] == 0.0
+            for (now_a, out_a), (now_b, _) in zip(calls, calls[1:]):
+                # the next round's clock IS the previous return, bitwise
+                assert now_b == out_a
+                assert now_b > now_a  # and strictly advances
+            # the final call ended the loop: nothing left, or unplaceable
+            last_out = calls[-1][1]
+            assert last_out is None or last_out > calls[-1][0]
+        # both loops saw the identical event list (same objects, no
+        # reordering): events due at a round's now are applied fleet-wide
+        # by apply_due_events before the round plans — shared by both.
+        assert events == sorted(events)
+
+
+# ---------------------------------------------------------------------------
+# the horizon-aware rounds
+# ---------------------------------------------------------------------------
+
+
+def _stranding_trace():
+    """Two long loose-deadline jobs arrive first; a tight 4-job burst is
+    known to arrive at t=120. A myopic round strands the cheap fast nodes
+    on the long jobs; the horizon sees the burst coming."""
+    jobs = [
+        Job(0, "fluidanimate", 3.0, deadline_s=30000.0, arrival_s=0.0),
+        Job(1, "fluidanimate", 3.0, deadline_s=30000.0, arrival_s=0.0),
+    ]
+    burst_t = 120.0
+    est = PROFILES["raytrace"].time(F_MAX, 16, 2.0)
+    for i in range(2, 6):
+        jobs.append(
+            Job(i, "raytrace", 2.0, deadline_s=burst_t + est * 1.35,
+                arrival_s=burst_t)
+        )
+    return jobs
+
+
+def _run_mode(jobs, *, lookahead, negotiate=True, horizon_s=600.0):
+    pool = make_pool(4, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    sched = FleetScheduler(
+        pool,
+        engine,
+        negotiator=Negotiator(pool, engine.power) if negotiate else None,
+        lookahead=LookaheadPolicy(horizon_s=horizon_s) if lookahead else None,
+    )
+    completed = sched.run(jobs)
+    return sched, completed
+
+
+def test_lookahead_beats_myopic_on_the_stranding_trace():
+    """The ISSUE acceptance in miniature: on a bursty trace the lookahead
+    fleet spends <= the myopic fleet's joules at equal-or-fewer misses —
+    and on THIS trace the win is strict (the myopic round gives the cheap
+    nodes away just before the burst needs them)."""
+    jobs = _stranding_trace()
+    myopic, _ = _run_mode(jobs, lookahead=False)
+    look, _ = _run_mode(jobs, lookahead=True)
+    assert look.deadline_misses() <= myopic.deadline_misses()
+    assert look.total_energy_j() <= myopic.total_energy_j() * 1.001
+    # the strict win that motivates the whole subsystem
+    assert look.total_energy_j() < myopic.total_energy_j()
+    assert look.deadline_misses() < myopic.deadline_misses()
+    assert look.telemetry.n_tentative_reservations > 0
+    # holds are plans: none survive the simulation
+    assert all(
+        not r.tentative for n in look.pool for r in n.reservations
+    )
+
+
+def test_lookahead_round_is_one_pareto_many_over_ready_and_future():
+    """The single-batched-pass invariant extends to the horizon: a
+    lookahead planning round issues exactly ONE ``pareto_many`` covering
+    every ready job AND every known future arrival — never a separate
+    ``plan_many``."""
+    pool = make_pool(4, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    sched = FleetScheduler(
+        pool,
+        engine,
+        negotiator=Negotiator(pool, engine.power),
+        lookahead=LookaheadPolicy(horizon_s=600.0),
+    )
+    plan_batches, pareto_batches = [], []
+    orig_plan, orig_pareto = engine.plan_many, engine.pareto_many
+
+    def counting_plan_many(ws):
+        ws = list(ws)
+        plan_batches.append(len(ws))
+        return orig_plan(ws)
+
+    def counting_pareto_many(ws):
+        ws = list(ws)
+        pareto_batches.append(len(ws))
+        return orig_pareto(ws)
+
+    engine.plan_many = counting_plan_many
+    engine.pareto_many = counting_pareto_many
+    sched.run(_stranding_trace())
+    planned = [r for r in sched.rounds if r.planned]
+    assert plan_batches == []
+    assert pareto_batches == [r.n_pending + r.n_future for r in planned]
+    assert any(r.n_future > 0 for r in planned)  # the burst was foreseen
+    assert any(r.n_tentative > 0 for r in planned)
+    assert len(sched.completed) == 6
+
+
+def test_lookahead_without_negotiator_also_not_worse():
+    """The greedy (non-negotiated) scheduler gets the same horizon: the
+    slot seed alone must never be worse than the myopic greedy."""
+    jobs = _stranding_trace()
+    myopic, _ = _run_mode(jobs, lookahead=False, negotiate=False)
+    look, _ = _run_mode(jobs, lookahead=True, negotiate=False)
+    assert look.deadline_misses() <= myopic.deadline_misses()
+    assert look.total_energy_j() <= myopic.total_energy_j() * 1.001
+    # rounds never count as negotiated without a configured Negotiator
+    assert not any(r.negotiated for r in look.rounds)
+
+
+def test_slot_mode_matches_scalar_negotiation_on_an_idle_pool():
+    """With no future jobs and an idle pool the slot mode IS the scalar
+    mode: same assignments, every start slot at ``now``."""
+    pool = make_pool(3, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    neg = Negotiator(pool, engine.power)
+    jobs = [
+        Job(i, app, 1.0, deadline_s=3000.0 + 100.0 * i, arrival_s=0.0)
+        for i, app in enumerate(sorted(PROFILES))
+    ]
+    sched = FleetScheduler(pool, engine)
+    workloads = [sched._workload(j, 0.0, 32) for j in jobs]
+    frontiers = engine.pareto_many(workloads)
+    terms = [w.terms for w in workloads]
+    slacks = [j.deadline_s for j in jobs]
+    free = [n.free_cores(0.0) for n in pool]
+    scalar = neg.negotiate(jobs, terms, frontiers, free, slacks)
+    slotted = neg.negotiate(
+        jobs, terms, frontiers, free, slacks,
+        now=0.0, arrivals=[0.0] * len(jobs),
+        profiles=[n.capacity_profile() for n in pool],
+    )
+    for a, b in zip(scalar.assignments, slotted.assignments):
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert (a.point_idx, a.node_idx, a.cores) == (
+                b.point_idx, b.node_idx, b.cores
+            )
+            assert b.start_s == 0.0
+
+
+def test_engine_earliest_start_shifts_the_slack():
+    """``Workload.earliest_start_s`` measures a future job's slack from
+    its arrival: the shifted workload's frontier equals the frontier of
+    the explicitly tightened constraint."""
+    pool = make_pool(2, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    terms = scheduler_mod.family_key("raytrace", 1.0)
+    base = Workload(
+        arch="raytrace", terms=terms,
+        constraints=Constraints(max_time_s=2000.0),
+    )
+    shifted = Workload(
+        arch="raytrace", terms=terms,
+        constraints=Constraints(max_time_s=2000.0),
+        earliest_start_s=1500.0,
+    )
+    tightened = Workload(
+        arch="raytrace", terms=terms,
+        constraints=Constraints(max_time_s=500.0),
+    )
+    assert engine.pareto(shifted) == engine.pareto(tightened)
+    assert engine.pareto(shifted) != engine.pareto(base)
+    p_shift, p_tight = engine.plan_many([shifted, tightened])
+    assert (p_shift.frequency_ghz, p_shift.chips) == (
+        p_tight.frequency_ghz, p_tight.chips
+    )
+    # a fully-blown window (delay >= slack) rides the fastest path
+    blown = Workload(
+        arch="raytrace", terms=terms,
+        constraints=Constraints(max_time_s=2000.0),
+        earliest_start_s=2500.0,
+    )
+    fit = engine._fits[blown.key]
+    assert engine.plan(blown).step_time_s <= float(fit.T.min()) * (1.0 + 2e-3)
