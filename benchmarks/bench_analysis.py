@@ -1,0 +1,56 @@
+"""Self-timing for the repro-lint pass (``python -m repro.analysis``).
+
+The pass runs at the top of EVERY ``scripts/verify.sh`` invocation, so
+its wall time is part of the edit-test loop the same way the engine's
+dispatch time is part of a scheduling round. This bench times the full
+in-process sweep over ``src/``, ``benchmarks/`` and ``examples/`` and
+records per-file cost plus the finding counts, so a rule whose visitor
+goes quadratic (or a tree that doubles) shows up in the trajectory
+before it shows up as a sluggish verify loop.
+
+Stdlib-only by construction — the analysis subsystem imports no jax.
+"""
+
+import os
+
+from benchmarks import common
+from repro.analysis import Baseline, analyze_paths
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+PATHS = ("src", "benchmarks", "examples")
+
+
+def run(quick: bool = False):
+    repeats = 1 if quick else 3
+    # warm once (first parse pays os.walk + file reads into page cache)
+    analyze_paths(PATHS, root=REPO)
+    best_us = None
+    result = None
+    for _ in range(repeats):
+        result, us = common.timed(analyze_paths, PATHS, root=REPO)
+        best_us = us if best_us is None else min(best_us, us)
+    baseline = Baseline.load(os.path.join(REPO, "analysis_baseline.json"))
+    new, baselined = baseline.split(result.findings)
+
+    per_file_us = best_us / max(result.n_files, 1)
+    common.emit(
+        "analysis_full_pass",
+        best_us,
+        f"{result.n_files} files, {per_file_us:.0f} us/file",
+    )
+    common.save_json(
+        "analysis",
+        {
+            "pass_us": best_us,
+            "us_per_file": per_file_us,
+            "n_files": result.n_files,
+            "n_findings": len(result.findings),
+            "n_new": len(new),
+            "n_baselined": len(baselined),
+            "n_suppressed": result.n_suppressed,
+        },
+    )
+
+
+if __name__ == "__main__":
+    run()

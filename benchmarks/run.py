@@ -71,6 +71,12 @@ def _run_fleet(quick: bool) -> None:
     bench_fleet.run()
 
 
+def _run_analysis(quick: bool) -> None:
+    from benchmarks import bench_analysis
+
+    bench_analysis.run(quick=quick)
+
+
 # name -> runner; insertion order is execution order for a full run
 BENCHES = {
     "kernels": _run_kernels,
@@ -80,6 +86,7 @@ BENCHES = {
     "engine": _run_engine,
     "svr_fit": _run_svr_fit,
     "fleet": _run_fleet,
+    "analysis": _run_analysis,
 }
 
 

@@ -1,0 +1,123 @@
+"""Perf-regression gate over ``experiments/bench/trajectory.json``.
+
+``benchmarks/run.py --append-trajectory`` appends one dated entry per
+run; this script (stdlib-only, run by ``scripts/verify.sh``) fails when
+the LATEST entry's fleet metrics regress more than ``--threshold``
+(default 20%) against the history:
+
+* ``fleet.speedup`` (batched round vs sequential; higher is better)
+* ``fleet.lookahead_overhead_ratio`` (horizon-aware round cost vs plain;
+  lower is better)
+
+The reference is the **median of the prior comparable entries** (same
+``quick`` flag), not the best-ever entry: single-shot container timings
+in the shipped history swing ±25% run to run, so a best-ever ratchet
+monotonically tightens until a healthy run fails. The median tracks the
+typical machine instead and still catches a real 20% cliff.
+
+Exit codes: 0 = ok (or not enough history to judge), 1 = regression,
+2 = unreadable trajectory file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+DEFAULT_PATH = "experiments/bench/trajectory.json"
+
+# metric key (under results.fleet), direction: +1 = higher is better
+METRICS: Tuple[Tuple[str, int], ...] = (
+    ("speedup", +1),
+    ("lookahead_overhead_ratio", -1),
+)
+
+
+def fleet_metric(entry: dict, key: str) -> Optional[float]:
+    value = entry.get("results", {}).get("fleet", {}).get(key)
+    return float(value) if isinstance(value, (int, float)) else None
+
+
+def check(trajectory: List[dict], threshold: float) -> List[str]:
+    """Regression messages for the latest entry ([] = gate passes)."""
+    if len(trajectory) < 3:
+        return []  # one prior entry is not a trend — don't gate on noise
+    latest = trajectory[-1]
+    priors = [e for e in trajectory[:-1] if e.get("quick") == latest.get("quick")]
+    problems = []
+    for key, direction in METRICS:
+        current = fleet_metric(latest, key)
+        history = [
+            m for m in (fleet_metric(e, key) for e in priors) if m is not None
+        ]
+        if current is None or len(history) < 2:
+            continue
+        reference = statistics.median(history)
+        if direction > 0:
+            regressed = current < (1.0 - threshold) * reference
+        else:
+            regressed = current > (1.0 + threshold) * reference
+        if regressed:
+            problems.append(
+                f"fleet.{key} regressed >{threshold:.0%}: latest "
+                f"{current:.3f} vs median-of-{len(history)}-priors "
+                f"{reference:.3f}"
+            )
+    return problems
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python scripts/check_trajectory.py",
+        description="fail when the latest benchmark trajectory entry "
+        "regresses against the median of its prior comparable entries",
+    )
+    parser.add_argument(
+        "--path",
+        default=DEFAULT_PATH,
+        help="trajectory file (default: %(default)s)",
+    )
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="allowed relative regression (default: %(default)s)",
+    )
+    args = parser.parse_args(argv)
+
+    try:
+        with open(args.path, encoding="utf-8") as f:
+            trajectory = json.load(f)
+    except FileNotFoundError:
+        print(f"trajectory gate: no history at {args.path} — nothing to check")
+        return 0
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"trajectory gate: cannot read {args.path}: {e}", file=sys.stderr)
+        return 2
+    if not isinstance(trajectory, list):
+        print(f"trajectory gate: {args.path} is not a list", file=sys.stderr)
+        return 2
+
+    problems = check(trajectory, args.threshold)
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}", file=sys.stderr)
+        print(
+            "(re-run `python -m benchmarks.run --append-trajectory` on a "
+            "quiet machine, or fix the regression)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"trajectory gate: ok ({len(trajectory)} entr"
+        f"{'y' if len(trajectory) == 1 else 'ies'}, threshold "
+        f"{args.threshold:.0%})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,9 +5,20 @@
 #
 #   scripts/verify.sh          # tier-1: PYTHONPATH=src python -m pytest -x -q
 #   scripts/verify.sh --fast   # sub-minute loop: ... -m "not slow"
+#
+# Both modes run first (stdlib-only, sub-second):
+#   * repro-lint — python -m repro.analysis over src/ benchmarks/
+#     examples/ against the committed baseline; any NEW contract
+#     violation fails the gate before the tests even start.
+#   * the trajectory perf gate — scripts/check_trajectory.py fails if
+#     the latest benchmark trajectory entry regressed >20% against the
+#     median of its prior comparable entries.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis src benchmarks examples --baseline analysis_baseline.json
+python scripts/check_trajectory.py
 
 if [[ "${1:-}" == "--fast" ]]; then
     exec python -m pytest -x -q -m "not slow"

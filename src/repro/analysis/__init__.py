@@ -1,0 +1,48 @@
+"""repro-lint: the repo's contracts, checked mechanically.
+
+The load-bearing invariants of this codebase — "engine.py owns the
+argmin", the frozen ``AppTerms``/``TermsFamily`` cache-key contract, the
+relative ``time_eps`` discipline, the one-batched-call-per-round hot-path
+rule, jit purity and the unit-suffix naming convention — each exist
+because their violation was the root cause of a shipped bug or a perf
+cliff. Prose in ``docs/architecture.md`` documents them; this subsystem
+*enforces* them: a pure-stdlib (``ast``-based, importable without jax)
+static-analysis pass with
+
+* a rule registry (``rules.RULES``; six repo-specific rules, each with
+  good/bad fixture pairs under ``tests/fixtures/analysis/``),
+* a CLI — ``python -m repro.analysis [paths] [--json] [--baseline FILE]``
+  — that exits non-zero on any non-baselined finding,
+* inline suppressions (``# repro: allow(<rule-id>)`` on the finding's
+  line or the line above, with a justification comment), and
+* a committed baseline (``analysis_baseline.json``) for findings that
+  are genuinely intended, each carrying a one-line justification.
+
+``scripts/verify.sh`` runs the pass over ``src/``, ``benchmarks/`` and
+``examples/`` (including in ``--fast`` mode — it is stdlib-only and
+sub-second), and a tier-1 test asserts the tree stays clean against the
+baseline. Rule id ↔ contract mapping: the "Enforced invariants" section
+of ``docs/architecture.md``.
+"""
+
+from repro.analysis.core import (
+    AnalysisResult,
+    Baseline,
+    Finding,
+    Rule,
+    analyze_paths,
+    analyze_source,
+    iter_python_files,
+)
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "AnalysisResult",
+    "Baseline",
+    "Finding",
+    "Rule",
+    "RULES",
+    "analyze_paths",
+    "analyze_source",
+    "iter_python_files",
+]

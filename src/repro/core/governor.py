@@ -73,9 +73,9 @@ class PowersaveGovernor(Governor):
 class UserspaceGovernor(Governor):
     name = "userspace"
 
-    def __init__(self, frequency: float, freq_table=None):
+    def __init__(self, frequency_ghz: float, freq_table=None):
         super().__init__(freq_table)
-        self.frequency = self.snap_up(frequency)
+        self.frequency = self.snap_up(frequency_ghz)
 
     def initial_frequency(self) -> float:
         return self.frequency

@@ -192,17 +192,17 @@ class Node:
         t = prof.time(f, p, n) * (1.0 + self.rng.normal(0.0, self.time_noise))
         t = max(t, 1e-3)
         n_samples = max(2, int(round(t)))
-        power = float(self._truth(f, p, self.sockets(p))) + self.rng.normal(
+        power_w = float(self._truth(f, p, self.sockets(p))) + self.rng.normal(
             0.0, self.power_noise_w, size=n_samples
         )
-        e = float(np.mean(power) * t)
+        e = float(np.mean(power_w) * t)
         return RunResult(
             time_s=t,
             energy_j=e,
             mean_freq_ghz=f,
-            mean_power_w=float(np.mean(power)),
+            mean_power_w=float(np.mean(power_w)),
             freq_trace=np.full(n_samples, f),
-            power_trace=power,
+            power_trace=power_w,
         )
 
     def run_governor(

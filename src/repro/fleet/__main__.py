@@ -83,13 +83,13 @@ def build_jobs(
         app = apps[i % len(apps)]
         n = float(input_sizes[int(rng.integers(len(input_sizes)))])
         est_fast = PROFILES[app].time(F_MAX, 16, n)
-        slack = float(rng.uniform(*slack_range))
+        slack_factor = float(rng.uniform(*slack_range))
         jobs.append(
             Job(
                 job_id=i,
                 app=app,
                 input_size=n,
-                deadline_s=t + est_fast * slack,
+                deadline_s=t + est_fast * slack_factor,
                 arrival_s=t,
             )
         )
@@ -123,13 +123,13 @@ def build_artifact_jobs(
     for i, w in enumerate(workloads):
         terms = TermsFamily(base=w.terms, app=f"{w.arch}:{w.shape_name}")
         est_fast = terms.step_time(F_MAX, 16)
-        slack = float(rng.uniform(*slack_range))
+        slack_factor = float(rng.uniform(*slack_range))
         jobs.append(
             Job(
                 job_id=i,
                 app=terms.app,
                 input_size=terms.input_size,
-                deadline_s=t + est_fast * slack,
+                deadline_s=t + est_fast * slack_factor,
                 arrival_s=t,
                 terms=terms,
             )

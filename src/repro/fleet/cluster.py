@@ -325,6 +325,10 @@ class CapacityProfile:
             | {
                 e
                 for s, e, _ in self.segments
+                # 0.5 caps the tolerance at HALF the segment duration — a
+                # fraction of (e - s), not an absolute epsilon; the absolute
+                # part still routes through time_eps above.
+                # repro: allow(epsilon-discipline)
                 if e > start_min_s + min(eps, 0.5 * (e - s))
             }
         )
@@ -422,14 +426,14 @@ class FleetNode:
         t = max(t, 1e-3)
         # cap the 1 Hz IPMI-like trace: artifact runs may be hours long
         n_samples = int(np.clip(round(t), 2, 600))
-        power = self.node.measure_power(f, p, n_samples=n_samples)
+        power_w = self.node.measure_power(f, p, n_samples=n_samples)
         return RunResult(
             time_s=t,
-            energy_j=float(np.mean(power)) * t,
+            energy_j=float(np.mean(power_w)) * t,
             mean_freq_ghz=f,
-            mean_power_w=float(np.mean(power)),
+            mean_power_w=float(np.mean(power_w)),
             freq_trace=np.full(n_samples, f),
-            power_trace=power,
+            power_trace=power_w,
         )
 
     def stress_grid(self, freqs=None, cores=None):

@@ -113,8 +113,8 @@ class NegotiationResult:
         (jobs deferred, deadline misses, total projected joules)."""
         deferred = sum(a is None for a in assignments)
         misses = sum(a is not None and not a.meets_deadline for a in assignments)
-        energy = float(sum(a.energy_j for a in assignments if a is not None))
-        return deferred, misses, energy
+        energy_j = float(sum(a.energy_j for a in assignments if a is not None))
+        return deferred, misses, energy_j
 
     @property
     def improved(self) -> bool:
@@ -161,7 +161,7 @@ class Negotiator:
     # -- option enumeration -------------------------------------------------
 
     def _options(
-        self, terms, frontier, free: Sequence[int], slack: float
+        self, terms, frontier, free: Sequence[int], slack_s: float
     ) -> List[Option]:
         """Every (frontier point, node) pair with individual capacity,
         projected via the one shared ``project_point`` definition."""
@@ -182,7 +182,7 @@ class Negotiator:
                         frequency_ghz=f_snap,
                         time_s=t_exp,
                         energy_j=e_exp,
-                        meets_deadline=slack > 0 and t_exp <= slack,
+                        meets_deadline=slack_s > 0 and t_exp <= slack_s,
                     )
                 )
         return out
@@ -404,7 +404,7 @@ class Negotiator:
         frontier,
         profiles: Sequence[CapacityProfile],
         start_min: float,
-        slack: float,
+        slack_s: float,
         now: float,
     ) -> List[Option]:
         """(frontier point × node × start slot): each pair contributes its
@@ -445,7 +445,7 @@ class Negotiator:
                             time_s=t_exp,
                             energy_j=e_exp,
                             meets_deadline=(
-                                slack > 0 and (t - now) + t_exp <= slack
+                                slack_s > 0 and (t - now) + t_exp <= slack_s
                             ),
                             start_s=float(t),
                         )

@@ -112,8 +112,8 @@ def run_governor_fleet(
     events = sorted(drift_events)
     ei = 0
     now = 0.0
-    job_energy: Dict[int, float] = {}
-    job_time: Dict[int, float] = {}
+    job_energy_j: Dict[int, float] = {}
+    job_time_s: Dict[int, float] = {}
     finishes: Dict[int, float] = {}
     misses = 0
     for _ in range(max_rounds):
@@ -134,8 +134,8 @@ def run_governor_fleet(
                 result = node.run_governor(job.app, gov, free, job.input_size)
                 finish = now + result.time_s
                 node.reserve(now, finish, free, job.job_id)
-                job_energy[job.job_id] = result.energy_j
-                job_time[job.job_id] = result.time_s
+                job_energy_j[job.job_id] = result.energy_j
+                job_time_s[job.job_id] = result.time_s
                 finishes[job.job_id] = finish
                 misses += finish > job.deadline_s + time_eps(job.deadline_s)
                 placed = True
@@ -147,16 +147,16 @@ def run_governor_fleet(
         if nxt is None:
             break
         now = nxt
-    makespan = max(finishes.values(), default=0.0)
+    makespan_s = max(finishes.values(), default=0.0)
     return ScenarioStats(
         name=governor_name,
-        total_energy_j=float(sum(job_energy.values())),
-        makespan_s=makespan,
-        utilization=pool.utilization(makespan),
+        total_energy_j=float(sum(job_energy_j.values())),
+        makespan_s=makespan_s,
+        utilization=pool.utilization(makespan_s),
         deadline_misses=int(misses),
-        n_jobs=len(job_energy),
-        job_energy_j=job_energy,
-        job_time_s=job_time,
+        n_jobs=len(job_energy_j),
+        job_energy_j=job_energy_j,
+        job_time_s=job_time_s,
     )
 
 

@@ -353,7 +353,7 @@ class FleetScheduler:
         return key
 
     def _workload(self, job: Job, now: float, free_cap: int) -> Workload:
-        slack = job.deadline_s - now
+        slack_s = job.deadline_s - now
         # A job already past its deadline gets max_time_s = 0.0, NOT None:
         # the empty time mask routes it through the engine's
         # on_infeasible="fastest" path (fastest point that still honors
@@ -365,7 +365,7 @@ class FleetScheduler:
             terms=self._terms_key(job),
             constraints=Constraints(
                 max_cores=free_cap,
-                max_time_s=slack if slack > 0 else 0.0,
+                max_time_s=slack_s if slack_s > 0 else 0.0,
             ),
         )
 
@@ -374,13 +374,13 @@ class FleetScheduler:
         measured from ``now`` (one time origin per round) but the engine
         shifts it by ``earliest_start_s`` — the job cannot start before it
         arrives, so its frontier is masked by ``deadline - arrival``."""
-        slack = job.deadline_s - now
+        slack_s = job.deadline_s - now
         return Workload(
             arch=job.app,
             terms=self._terms_key(job),
             constraints=Constraints(
                 max_cores=max_cores,
-                max_time_s=slack if slack > 0 else 0.0,
+                max_time_s=slack_s if slack_s > 0 else 0.0,
             ),
             earliest_start_s=job.arrival_s - now,
         )
@@ -431,11 +431,11 @@ class FleetScheduler:
         pending_now = [j for j in self._pending if j.arrival_s <= now + eps]
         future: List[Job] = []
         if self.lookahead is not None:
-            horizon = now + self.lookahead.horizon_s
+            horizon_s = now + self.lookahead.horizon_s
             future = [
                 j
                 for j in self._pending
-                if now + eps < j.arrival_s <= horizon
+                if now + eps < j.arrival_s <= horizon_s
             ]
         cap = self.pool.max_free_cores(now)
         planned = bool(pending_now) and cap > 0
@@ -626,7 +626,7 @@ class FleetScheduler:
         cores: int,
         f: float,
         ref_time_s: float,
-        slack: float,
+        slack_s: float,
         require_deadline: bool,
     ) -> List[Tuple[float, int, FleetNode, float, float]]:
         """(expected energy, node index, node, expected time, snapped f),
@@ -644,7 +644,7 @@ class FleetScheduler:
             f_snap, t_exp, e_exp = project_point(
                 node.spec, self.engine.power, terms, cores, f, ref_time_s
             )
-            if require_deadline and t_exp > slack:
+            if require_deadline and t_exp > slack_s:
                 continue
             out.append((e_exp, idx, node, t_exp, f_snap))
         return sorted(out, key=lambda c: (c[0], c[1]))
@@ -652,17 +652,17 @@ class FleetScheduler:
     def _place(
         self, job: Job, workload: Workload, plan: EnergyPlan, now: float
     ) -> Optional[Placement]:
-        slack = job.deadline_s - now
+        slack_s = job.deadline_s - now
         frontier = None
         # First pass honors the deadline; if nothing in the pool can make
         # it, the second pass places for minimum energy and eats the miss
         # (better a late cheap job than a starved queue).
         terms = workload.terms
-        passes = (True, False) if slack > 0 else (False,)
+        passes = (True, False) if slack_s > 0 else (False,)
         for require_deadline in passes:
             cand = self._candidates(
                 now, terms, plan.chips, plan.frequency_ghz, plan.step_time_s,
-                slack, require_deadline,
+                slack_s, require_deadline,
             )
             if cand:
                 e_exp, _, node, t_exp, f_snap = cand[0]
@@ -681,11 +681,14 @@ class FleetScheduler:
             # with the fewest extra joules. pareto() is deterministic
             # (time-sorted, energy tie-break), so this walk is reproducible.
             if frontier is None:
+                # one deadline-infeasible job on the rare fallback path,
+                # memoized across both passes — not a per-round N-job loop
+                # repro: allow(batched-hot-path)
                 frontier = self.engine.pareto(workload)
             for point in reversed(frontier):  # slowest/cheapest first
                 cand = self._candidates(
                     now, terms, point.chips, point.frequency_ghz,
-                    point.step_time_s, slack, require_deadline,
+                    point.step_time_s, slack_s, require_deadline,
                 )
                 if cand:
                     e_exp, _, node, t_exp, f_snap = cand[0]
@@ -920,12 +923,12 @@ class FleetScheduler:
                     c.placement.frequency_ghz, c.placement.cores
                 ),
             )
-            slack = job.deadline_s - now
+            slack_s = job.deadline_s - now
             free_cap = max(
                 n.free_cores(now, exclude_job=job.job_id) for n in self.pool
             )
             candidates.append(
-                (c, terms, remaining_frac, e_full * remaining_frac, slack)
+                (c, terms, remaining_frac, e_full * remaining_frac, slack_s)
             )
             workloads.append(
                 Workload(
@@ -934,11 +937,11 @@ class FleetScheduler:
                     constraints=Constraints(
                         max_cores=free_cap,
                         # the frontier speaks full-run times; the remainder
-                        # only runs remaining_frac of them. slack <= 0 is
+                        # only runs remaining_frac of them. slack_s <= 0 is
                         # the same past-deadline case as _workload: 0.0
                         # (fastest-feasible), never None (unconstrained)
                         max_time_s=(
-                            slack / remaining_frac if slack > 0 else 0.0
+                            slack_s / remaining_frac if slack_s > 0 else 0.0
                         ),
                     ),
                 )
@@ -947,7 +950,7 @@ class FleetScheduler:
             return 0
         frontiers = self.engine.pareto_many(workloads)  # ONE batched pass
         migrated = 0
-        for (c, terms, r_b, e_remain_cur, slack), frontier in zip(
+        for (c, terms, r_b, e_remain_cur, slack_s), frontier in zip(
             candidates, frontiers
         ):
             job = c.placement.job
@@ -956,7 +959,7 @@ class FleetScheduler:
             t_remain_cur = node_cur.spec.expected_time(
                 terms.step_time(c.placement.frequency_ghz, c.placement.cores)
             ) * r_b
-            meets_now = slack > 0 and t_remain_cur <= slack
+            meets_now = slack_s > 0 and t_remain_cur <= slack_s
             best = None
             for pt in frontier:
                 for idx, node in enumerate(self.pool):
@@ -967,7 +970,7 @@ class FleetScheduler:
                         node.spec, self.engine.power, terms, pt.chips,
                         pt.frequency_ghz, pt.step_time_s,
                     )
-                    if meets_now and slack > 0 and r_b * t_exp > slack:
+                    if meets_now and slack_s > 0 and r_b * t_exp > slack_s:
                         continue  # never trade an on-deadline job into a miss
                     cand = (r_b * e_exp, idx, f_snap, t_exp, pt)
                     if best is None or cand[:2] < best[:2]:

@@ -1,0 +1,14 @@
+"""Fixture: terms dataclass (has step_time => engine cache key) that is
+mutable — cache-key-frozen fires four times (not frozen, two unhashable
+field types, mutable default_factory)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BadTerms:
+    coef: list
+    tags: dict = dataclasses.field(default_factory=dict)
+
+    def step_time(self, f, cores):
+        return self.coef[0] / (f * cores)

@@ -1,0 +1,12 @@
+"""Fixture: frozen, hashable terms dataclass — quiet."""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodTerms:
+    coef: Tuple[float, ...]
+
+    def step_time(self, f, cores):
+        return self.coef[0] / (f * cores)

@@ -1,0 +1,7 @@
+"""Fixture: grid argmin outside core/engine.py — argmin-ownership fires."""
+
+import numpy as np
+
+
+def cheapest_point(energy_grid_j):
+    return int(np.argmin(energy_grid_j))

@@ -1,0 +1,7 @@
+"""Fixture: core/engine.py is the ONE file allowed to argmin — quiet."""
+
+import numpy as np
+
+
+def solve_grid(energy_grid_j):
+    return int(np.argmin(energy_grid_j))

@@ -1,0 +1,8 @@
+"""Fixture: sim-clock comparisons bypassing time_eps — epsilon-discipline
+fires twice (exact == on times, absolute float tolerance)."""
+
+
+def due(now, deadline_s):
+    if now == deadline_s:
+        return True
+    return now > deadline_s - 1e-9

@@ -1,0 +1,7 @@
+"""Fixture: sim-clock comparison routed through time_eps — quiet."""
+
+from repro.fleet.cluster import time_eps
+
+
+def due(now, deadline_s):
+    return now >= deadline_s - time_eps(deadline_s)

@@ -1,0 +1,10 @@
+"""Fixture: per-item plan()/pareto() in loops — batched-hot-path fires
+twice (comprehension and for-loop)."""
+
+
+def place_all(engine, workloads):
+    plans = [engine.plan(w) for w in workloads]
+    frontiers = []
+    for w in workloads:
+        frontiers.append(engine.pareto(w))
+    return plans, frontiers

@@ -1,0 +1,5 @@
+"""Fixture: one batched call per round — quiet."""
+
+
+def place_all(engine, workloads):
+    return engine.plan_many(workloads), engine.pareto_many(workloads)

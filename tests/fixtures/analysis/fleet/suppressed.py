@@ -1,0 +1,6 @@
+"""Fixture: a violation silenced by an inline allow-comment."""
+
+
+def sequential_arm(engine, workloads):
+    # deliberate sequential baseline  # repro: allow(batched-hot-path)
+    return [engine.plan(w) for w in workloads]

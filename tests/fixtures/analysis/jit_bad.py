@@ -1,0 +1,13 @@
+"""Fixture: host syncs and side effects inside a jitted function —
+jit-purity fires three times (print, float(), np.mean)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def objective(x):
+    print("tracing")
+    scale = float(np.mean(x))
+    return jnp.sum(x) * scale

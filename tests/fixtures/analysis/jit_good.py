@@ -1,0 +1,9 @@
+"""Fixture: a pure jitted function — quiet."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def objective(x):
+    return jnp.sum(x) / x.shape[0]

@@ -1,0 +1,8 @@
+"""Fixture: unit-suffix fires three times (mixed ms+s arithmetic, two
+quantity names without suffixes)."""
+
+
+def budget(energy_j, time_ms, deadline_s):
+    makespan = time_ms + deadline_s
+    total_energy = energy_j
+    return makespan, total_energy

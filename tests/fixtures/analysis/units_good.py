@@ -1,0 +1,7 @@
+"""Fixture: consistent unit suffixes — quiet."""
+
+
+def budget(energy_j, time_s, deadline_s):
+    makespan_s = time_s + deadline_s
+    total_energy_j = energy_j
+    return makespan_s, total_energy_j

@@ -1,0 +1,203 @@
+"""repro-lint checks the repo; these tests check repro-lint.
+
+* One good/bad fixture pair per rule under ``tests/fixtures/analysis/``:
+  the bad file fires (with the expected count), the good file stays
+  quiet. Fixture subdirectories mirror the scope paths (``core/``,
+  ``fleet/``) so path-scoped rules exercise their real predicates —
+  including the ``core/engine.py`` argmin exemption.
+* The machinery itself: suppression comments, count-aware baseline
+  round-trip, stale-entry reporting, ``--json`` schema stability, CLI
+  exit codes.
+* The tier-1 gate: the shipped tree is CLEAN against the committed
+  baseline, every baseline entry carries a justification, and none are
+  stale.
+
+Everything here is stdlib-only (no jax import) and rides the fast loop.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import RULES, Baseline, Finding, analyze_paths, analyze_source
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.core import SCHEMA_VERSION
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+BASELINE = os.path.join(REPO, "analysis_baseline.json")
+
+
+def _run_fixture(rel_path, rule_id):
+    """Analyze one fixture file as if it lived at its fixture-relative
+    path (``fleet/epsilon_bad.py``), so rule scoping is exercised."""
+    with open(os.path.join(FIXTURES, rel_path.replace("/", os.sep))) as f:
+        src = f.read()
+    return analyze_source(src, rel_path, [RULES[rule_id]])
+
+
+# one (rule, bad fixture, expected fires, good fixture) row per rule
+RULE_FIXTURES = [
+    ("argmin-ownership", "core/argmin_bad.py", 1, "core/engine.py"),
+    ("epsilon-discipline", "fleet/epsilon_bad.py", 2, "fleet/epsilon_good.py"),
+    ("batched-hot-path", "fleet/hotpath_bad.py", 2, "fleet/hotpath_good.py"),
+    ("cache-key-frozen", "cachekey_bad.py", 4, "cachekey_good.py"),
+    ("jit-purity", "jit_bad.py", 3, "jit_good.py"),
+    ("unit-suffix", "units_bad.py", 3, "units_good.py"),
+]
+
+
+def test_every_rule_has_a_fixture_row():
+    assert {r for r, _, _, _ in RULE_FIXTURES} == set(RULES)
+    assert len(RULES) >= 6
+
+
+@pytest.mark.parametrize("rule_id,bad,n_expected,good", RULE_FIXTURES)
+def test_rule_fires_on_bad_and_stays_quiet_on_good(rule_id, bad, n_expected, good):
+    findings, _ = _run_fixture(bad, rule_id)
+    assert len(findings) == n_expected, [f.render() for f in findings]
+    for f in findings:
+        assert f.rule == rule_id
+        assert f.path == bad
+        assert f.line > 0 and f.message
+    quiet, _ = _run_fixture(good, rule_id)
+    assert quiet == [], [f.render() for f in quiet]
+
+
+def test_argmin_exemption_is_the_path_not_the_code():
+    """Identical argmin code: fires at core/argmin_bad.py, exempt at
+    core/engine.py — ownership is positional, not syntactic."""
+    with open(os.path.join(FIXTURES, "core", "engine.py")) as f:
+        src = f.read()
+    fired, _ = analyze_source(src, "core/not_engine.py", [RULES["argmin-ownership"]])
+    assert len(fired) == 1
+    exempt, _ = analyze_source(src, "core/engine.py", [RULES["argmin-ownership"]])
+    assert exempt == []
+
+
+def test_suppression_comment_is_honored():
+    with open(os.path.join(FIXTURES, "fleet", "suppressed.py")) as f:
+        src = f.read()
+    findings, n_suppressed = analyze_source(
+        src, "fleet/suppressed.py", [RULES["batched-hot-path"]]
+    )
+    assert findings == [] and n_suppressed == 1
+    # strip the allow-comment: the same code must fire
+    stripped = src.replace("# repro: allow(batched-hot-path)", "")
+    findings, n_suppressed = analyze_source(
+        stripped, "fleet/suppressed.py", [RULES["batched-hot-path"]]
+    )
+    assert len(findings) == 1 and n_suppressed == 0
+
+
+def test_suppression_must_name_the_rule():
+    src = "def f(e, ws):\n    # repro: allow(unit-suffix)\n    return [e.plan(w) for w in ws]\n"
+    findings, n_suppressed = analyze_source(
+        src, "fleet/x.py", [RULES["batched-hot-path"]]
+    )
+    assert len(findings) == 1 and n_suppressed == 0
+
+
+def test_baseline_roundtrip_and_stale_reporting(tmp_path):
+    result = analyze_paths([FIXTURES], root=REPO)
+    assert result.findings, "the bad fixtures must produce findings"
+    path = str(tmp_path / "baseline.json")
+    Baseline.from_findings(result.findings, justification="fixture").save(path)
+    reloaded = Baseline.load(path)
+    new, baselined = reloaded.split(result.findings)
+    assert new == [] and len(baselined) == len(result.findings)
+    assert reloaded.stale_entries(result.findings) == []
+    # drop one finding: exactly one baseline entry goes stale
+    stale = reloaded.stale_entries(result.findings[1:])
+    assert len(stale) == 1
+
+
+def test_baseline_matching_is_count_aware():
+    f = Finding(rule="r", path="p.py", line=3, col=0, message="m")
+    twin = Finding(rule="r", path="p.py", line=9, col=4, message="m")
+    one_entry = Baseline(entries=[{"rule": "r", "path": "p.py", "message": "m"}])
+    new, baselined = one_entry.split([f, twin])
+    assert len(new) == 1 and len(baselined) == 1  # a copy of a sin is NEW
+
+
+def test_json_schema_is_stable(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "tests/fixtures/analysis", "--json"],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        timeout=120,
+    )
+    assert proc.returncode == 1  # bad fixtures => new findings
+    payload = json.loads(proc.stdout)
+    assert payload["version"] == SCHEMA_VERSION
+    assert set(payload) == {
+        "version", "paths", "rules", "counts", "findings", "parse_errors",
+    }
+    assert set(payload["counts"]) == {
+        "files", "findings", "new", "baselined", "suppressed", "parse_errors",
+    }
+    assert payload["counts"]["suppressed"] == 1  # fleet/suppressed.py
+    for f in payload["findings"]:
+        assert set(f) == {
+            "rule", "path", "line", "col", "message", "symbol", "baselined",
+        }
+    assert {r["id"] for r in payload["rules"]} == set(RULES)
+
+
+def test_cli_rule_listing_and_selection(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in RULES:
+        assert rule_id in out
+    assert cli_main(["--select", "no-such-rule", FIXTURES]) == 2
+    # selecting one rule ignores the others' violations
+    assert cli_main(["--select", "argmin-ownership", os.path.join(FIXTURES, "jit_bad.py")]) == 0
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    path = str(tmp_path / "b.json")
+    assert cli_main([FIXTURES, "--write-baseline", path]) == 0
+    assert cli_main([FIXTURES, "--baseline", path]) == 0
+    out = capsys.readouterr().out
+    assert "0 new" in out
+
+
+def test_shipped_tree_is_clean_against_the_committed_baseline():
+    """The tier-1 gate: zero non-baselined findings over src/,
+    benchmarks/ and examples/, no stale grandfather entries, and every
+    baseline entry justified."""
+    result = analyze_paths(["src", "benchmarks", "examples"], root=REPO)
+    assert result.parse_errors == []
+    baseline = Baseline.load(BASELINE)
+    new, _ = baseline.split(result.findings)
+    assert new == [], "new findings:\n" + "\n".join(f.render() for f in new)
+    assert baseline.stale_entries(result.findings) == []
+    for entry in baseline.entries:
+        assert entry.get("justification", "").strip(), entry
+
+
+def test_adding_a_bad_fixture_fails_the_gate(tmp_path):
+    """Acceptance: dropping any bad fixture into the analyzed tree flips
+    the CLI non-zero (the committed baseline does not absorb it)."""
+    tree = tmp_path / "fleet"
+    tree.mkdir()
+    shutil.copy(os.path.join(FIXTURES, "fleet", "hotpath_bad.py"), tree)
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis", "fleet",
+            "--baseline", BASELINE,
+        ],
+        capture_output=True,
+        text=True,
+        cwd=str(tmp_path),
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        timeout=120,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "batched-hot-path" in proc.stdout

@@ -56,6 +56,7 @@ def test_readme_documents_the_tier1_command_and_module_map():
         "python -m repro.core.evaluate --quick",
         "python -m repro.fleet --quick",
         "python -m benchmarks.run",
+        "python -m repro.analysis",
     ):
         assert cmd in text, f"README lost the {cmd!r} quickstart"
     for path in ("docs/architecture.md", "docs/benchmarks.md"):
@@ -85,12 +86,15 @@ import io
 
 import repro.fleet.__main__ as fleet_main
 import repro.core.evaluate as eval_main
+import repro.analysis.__main__ as lint_main
 import benchmarks.run as bench_main
 
 for mod, flags in (
     (fleet_main, ("--quick", "--artifacts", "--fallback", "--json",
                   "--nodes", "--horizon", "--burst")),
     (eval_main, ("--quick", "--objective")),
+    (lint_main, ("--json", "--baseline", "--write-baseline", "--select",
+                 "--list-rules")),
     (bench_main, ("--quick", "--only", "--append-trajectory")),
 ):
     buf = io.StringIO()
@@ -139,7 +143,7 @@ def test_bench_registry_names_are_stable():
         from benchmarks import run as bench_run
 
         assert set(bench_run.BENCHES) >= {
-            "paper", "engine", "svr_fit", "fleet", "kernels",
+            "paper", "engine", "svr_fit", "fleet", "kernels", "analysis",
         }
     finally:
         sys.path.remove(REPO)
@@ -160,6 +164,18 @@ def test_verify_script_pins_the_tier1_commands():
         "verify.sh lost the tier-1 command"
     )
     assert 'PYTHONPATH="src' in text  # same path setup the README documents
+    # both stdlib gates run BEFORE the tests, in both modes (they sit
+    # above the --fast branch)
+    assert (
+        "python -m repro.analysis src benchmarks examples "
+        "--baseline analysis_baseline.json" in text
+    ), "verify.sh lost the repro-lint gate"
+    assert "python scripts/check_trajectory.py" in text, (
+        "verify.sh lost the trajectory perf gate"
+    )
+    fast_branch = text.index('"${1:-}" == "--fast"')
+    assert text.rindex("python -m repro.analysis") < fast_branch
+    assert text.rindex("python scripts/check_trajectory.py") < fast_branch
 
 
 def test_bench_trajectory_appends_one_entry_per_run(tmp_path, monkeypatch):

@@ -1,0 +1,82 @@
+"""The trajectory perf gate: scripts/check_trajectory.py.
+
+Synthetic histories prove the gate (a) stays quiet on healthy noise,
+(b) fails a real >20% cliff in either metric, (c) never gates on thin
+history, (d) only compares entries with the same ``quick`` flag, and
+(e) passes on the SHIPPED history — verify.sh runs this script
+unconditionally, so a red gate here means a bricked verify loop.
+
+Stdlib-only, fast loop.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SCRIPT = os.path.join(REPO, "scripts", "check_trajectory.py")
+
+spec = importlib.util.spec_from_file_location("check_trajectory", SCRIPT)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+
+def entry(speedup, look=1.3, quick=False):
+    return {
+        "run_at": "2026-01-01T00:00:00",
+        "quick": quick,
+        "results": {
+            "fleet": {"speedup": speedup, "lookahead_overhead_ratio": look}
+        },
+    }
+
+
+def test_healthy_noise_passes():
+    history = [entry(s) for s in (14.0, 16.8, 10.0, 12.2, 12.4)]
+    assert gate.check(history, 0.20) == []
+
+
+def test_speedup_cliff_fails():
+    history = [entry(s) for s in (14.0, 15.0, 13.0, 14.5, 8.0)]
+    problems = gate.check(history, 0.20)
+    assert len(problems) == 1 and "speedup" in problems[0]
+
+
+def test_overhead_cliff_fails():
+    history = [entry(12.0, look=r) for r in (1.3, 1.2, 1.3, 1.25, 1.9)]
+    problems = gate.check(history, 0.20)
+    assert len(problems) == 1 and "lookahead_overhead_ratio" in problems[0]
+
+
+def test_thin_history_never_gates():
+    assert gate.check([], 0.20) == []
+    assert gate.check([entry(12.0), entry(1.0)], 0.20) == []
+
+
+def test_quick_entries_are_not_compared_with_full_entries():
+    # a slow full run vs fast --quick priors must not look like a cliff
+    history = [entry(40.0, quick=True)] * 4 + [entry(39.0, quick=True), entry(12.0)]
+    assert gate.check(history, 0.20) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    path = str(tmp_path / "trajectory.json")
+    assert gate.main(["--path", path]) == 0  # missing file: nothing to check
+    with open(path, "w") as f:
+        f.write("[{broken")
+    assert gate.main(["--path", path]) == 2
+    with open(path, "w") as f:
+        json.dump([entry(s) for s in (14.0, 15.0, 13.0, 7.0)], f)
+    assert gate.main(["--path", path]) == 1
+    with open(path, "w") as f:
+        json.dump([entry(s) for s in (14.0, 15.0, 13.0, 14.0)], f)
+    assert gate.main(["--path", path]) == 0
+
+
+def test_shipped_history_passes_the_gate():
+    shipped = os.path.join(REPO, "experiments", "bench", "trajectory.json")
+    if not os.path.exists(shipped):
+        pytest.skip("no shipped trajectory")
+    assert gate.main(["--path", shipped]) == 0
