@@ -11,8 +11,11 @@ configurations.
 
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import emit, save_json, timed
 from repro.configs.base import SHAPES
+from repro.core import svr
 from repro.core.engine import Constraints, PlanningEngine, Workload
 from repro.core.tpu_power import FleetTelemetry, fit_fleet_power
 
@@ -91,7 +94,91 @@ def run():
     return speedup
 
 
+def run_scale(quick: bool = False):
+    """PR-7 scale sweep: the fused Pallas grid argmin vs the exact batched
+    path at B ∈ {32, 1k, 10k} pending workloads, plus RFF fit timing at
+    n ∈ {64, 512, 4096} training samples.
+
+    The exact arm (``plan_many(fused=False)``) is the pre-PR-7 batched
+    pipeline — one device objective tensor, then a host argmin + mask
+    build per workload; the fused arm reduces the whole (B, G) sweep in
+    one kernel call. Parity is asserted at EVERY size: the fused arm must
+    reproduce the exact arm's chosen (f, cores) bitwise. The RFF rows
+    check the linear-in-n promise of ``svr.fit_many(method="rff")``:
+    ``rff_linearity`` is (time ratio)/(n ratio) across the sweep — ~1 is
+    linear, n²-ish growth pushes it toward n_max/n_min.
+    """
+    pm = fit_fleet_power(FleetTelemetry(seed=0))
+    eng = PlanningEngine(pm, noise=0.01, seed=0)
+    base = _workloads()
+
+    sizes = (32, 256) if quick else (32, 1024, 10000)
+    plan_rows = []
+    for b in sizes:
+        ws = [base[i % len(base)] for i in range(b)]
+        # warm both arms: family fits + grid predictions memoize, and the
+        # fused kernel compiles once per (B, nf, nc) geometry
+        eng.plan_many(ws, fused=False)
+        eng.plan_many(ws)
+        exact_plans, exact_us = timed(eng.plan_many, ws, fused=False)
+        fused_plans, fused_us = timed(eng.plan_many, ws)
+        assert [(p.frequency_ghz, p.chips) for p in exact_plans] == [
+            (p.frequency_ghz, p.chips) for p in fused_plans
+        ], f"fused plans diverge from exact plans at B={b}"
+        speedup = exact_us / fused_us
+        emit(
+            "engine_scale_plan",
+            fused_us,
+            f"B={b}_exact_us={exact_us:.0f}_speedup={speedup:.1f}x_parity=ok",
+        )
+        plan_rows.append(
+            {
+                "n_workloads": b,
+                "exact_us": exact_us,
+                "fused_us": fused_us,
+                "speedup": speedup,
+            }
+        )
+
+    rff_ns = (64, 512) if quick else (64, 512, 4096)
+    rng = np.random.default_rng(0)
+    rff_rows = []
+    for n in rff_ns:
+        x = np.stack(
+            [rng.uniform(0.6, 1.1, n), rng.choice([8.0, 64.0, 256.0, 512.0], n)],
+            axis=1,
+        ).astype(np.float32)
+        y = (0.05 / (x[:, 0] * x[:, 1] ** 0.7)).astype(np.float32)
+        kw = dict(method="rff", gamma=0.5, standardize=True, log_target=True)
+        svr.fit_many([(x, y)], **kw)  # warm (BLAS/thread pools)
+        _, fit_us = timed(svr.fit_many, [(x, y)], **kw)
+        emit("engine_scale_rff_fit", fit_us, f"n={n}")
+        rff_rows.append({"n_samples": n, "fit_us": fit_us})
+
+    time_ratio = rff_rows[-1]["fit_us"] / rff_rows[0]["fit_us"]
+    n_ratio = rff_ns[-1] / rff_ns[0]
+    rff_linearity = time_ratio / n_ratio
+    scale_speedup = plan_rows[-1]["speedup"]
+    emit(
+        "engine_scale",
+        plan_rows[-1]["fused_us"],
+        f"B={plan_rows[-1]['n_workloads']}_scale_speedup={scale_speedup:.1f}x_"
+        f"rff_linearity={rff_linearity:.2f}",
+    )
+    save_json(
+        "engine_scale",
+        {
+            "plan": plan_rows,
+            "scale_speedup": scale_speedup,
+            "rff_fit": rff_rows,
+            "rff_linearity": rff_linearity,
+        },
+    )
+    return scale_speedup
+
+
 if __name__ == "__main__":
     # PYTHONPATH=src python -m benchmarks.bench_engine
     print("name,us_per_call,derived")
     run()
+    run_scale()

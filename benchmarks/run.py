@@ -59,6 +59,12 @@ def _run_engine(quick: bool) -> None:
     bench_engine.run()
 
 
+def _run_engine_scale(quick: bool) -> None:
+    from benchmarks import bench_engine
+
+    bench_engine.run_scale(quick=quick)
+
+
 def _run_svr_fit(quick: bool) -> None:
     from benchmarks import bench_svr_fit
 
@@ -84,6 +90,7 @@ BENCHES = {
     "roofline": _run_roofline,
     "planner": _run_planner,
     "engine": _run_engine,
+    "engine_scale": _run_engine_scale,
     "svr_fit": _run_svr_fit,
     "fleet": _run_fleet,
     "analysis": _run_analysis,

@@ -8,6 +8,8 @@ the LATEST entry's fleet metrics regress more than ``--threshold``
 * ``fleet.speedup`` (batched round vs sequential; higher is better)
 * ``fleet.lookahead_overhead_ratio`` (horizon-aware round cost vs plain;
   lower is better)
+* ``engine_scale.scale_speedup`` (fused Pallas sweep vs the exact
+  batched path at the largest B; higher is better)
 
 The reference is the **median of the prior comparable entries** (same
 ``quick`` flag), not the best-ever entry: single-shot container timings
@@ -29,15 +31,16 @@ from typing import List, Optional, Sequence, Tuple
 
 DEFAULT_PATH = "experiments/bench/trajectory.json"
 
-# metric key (under results.fleet), direction: +1 = higher is better
-METRICS: Tuple[Tuple[str, int], ...] = (
-    ("speedup", +1),
-    ("lookahead_overhead_ratio", -1),
+# (results section, metric key, direction): +1 = higher is better
+METRICS: Tuple[Tuple[str, str, int], ...] = (
+    ("fleet", "speedup", +1),
+    ("fleet", "lookahead_overhead_ratio", -1),
+    ("engine_scale", "scale_speedup", +1),
 )
 
 
-def fleet_metric(entry: dict, key: str) -> Optional[float]:
-    value = entry.get("results", {}).get("fleet", {}).get(key)
+def section_metric(entry: dict, section: str, key: str) -> Optional[float]:
+    value = entry.get("results", {}).get(section, {}).get(key)
     return float(value) if isinstance(value, (int, float)) else None
 
 
@@ -48,10 +51,12 @@ def check(trajectory: List[dict], threshold: float) -> List[str]:
     latest = trajectory[-1]
     priors = [e for e in trajectory[:-1] if e.get("quick") == latest.get("quick")]
     problems = []
-    for key, direction in METRICS:
-        current = fleet_metric(latest, key)
+    for section, key, direction in METRICS:
+        current = section_metric(latest, section, key)
         history = [
-            m for m in (fleet_metric(e, key) for e in priors) if m is not None
+            m
+            for m in (section_metric(e, section, key) for e in priors)
+            if m is not None
         ]
         if current is None or len(history) < 2:
             continue
@@ -62,7 +67,7 @@ def check(trajectory: List[dict], threshold: float) -> List[str]:
             regressed = current > (1.0 + threshold) * reference
         if regressed:
             problems.append(
-                f"fleet.{key} regressed >{threshold:.0%}: latest "
+                f"{section}.{key} regressed >{threshold:.0%}: latest "
                 f"{current:.3f} vs median-of-{len(history)}-priors "
                 f"{reference:.3f}"
             )

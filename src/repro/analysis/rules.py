@@ -1,4 +1,4 @@
-"""The six enforced contracts, as AST checks.
+"""The seven enforced contracts, as AST checks.
 
 Each rule pins one documented invariant whose violation was (or would
 be) the root cause of a shipped bug or a perf cliff:
@@ -15,6 +15,10 @@ be) the root cause of a shipped bug or a perf cliff:
 * ``jit-purity``         — no host syncs (``np.*``, ``.item()``,
   ``float()``) or side effects inside jitted functions; each retraces or
   blocks the device pipeline.
+* ``vectorize-enumeration`` — option enumeration evaluates the whole
+  (frontier × pool) grid in one vectorized pass; per-pair
+  ``project_point`` calls in a loop are the K·M dispatch cliff at
+  10⁴–10⁵ jobs (the PR-7 perf class).
 * ``unit-suffix``        — physical quantities carry ``_j``/``_s``/
   ``_ghz``/``_w`` suffixes, and +,-,comparison never mix suffixes
   (× and ÷ legitimately change dimension: J = W·s).
@@ -316,6 +320,39 @@ def check_batched_hot_path(
                 node,
                 f"per-item {_dotted(node.func)}() inside a loop — batch "
                 f"the round with {node.func.attr}_many",
+            )
+
+
+# ---------------------------------------------------------------------------
+# 3b · vectorize-enumeration
+# ---------------------------------------------------------------------------
+
+
+@register(
+    "vectorize-enumeration",
+    "per-pair project_point() inside an enumeration loop",
+    "hot-path enumeration projects the whole (frontier × pool) grid in "
+    "one vectorized pass (Negotiator._project_grid); a project_point "
+    "call per pair is the K·M dispatch cliff",
+    _scope_hot_path,
+)
+def check_vectorize_enumeration(
+    tree: ast.Module, src: str, path: str
+) -> Iterable[Finding]:
+    _annotate_parents(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _called_name(node) != "project_point":
+            continue
+        if _in_loop(node):
+            yield _find(
+                "vectorize-enumeration",
+                path,
+                node,
+                f"per-pair {_dotted(node.func)}() inside a loop — project "
+                "the whole grid in one vectorized pass "
+                "(Negotiator._project_grid), or justify the scalar call",
             )
 
 

@@ -35,6 +35,7 @@ thin compatibility wrappers over this module.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
@@ -45,6 +46,7 @@ import numpy as np
 
 from repro.core import svr as svr_mod
 from repro.core.power import PowerModel
+from repro.kernels import ops as kernel_ops
 from repro.core.tpu_power import (
     DCN_POD_PENALTY,
     F_GRID,
@@ -226,18 +228,85 @@ def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
     ]
 
 
-@jax.jit
-def _objective_many(T: jnp.ndarray, W: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
-    """The whole (workload × frequency × cores) tensor in one jitted pass.
+# ---------------------------------------------------------------------------
+# compiled grid callables, memoized on (B, nf, nc) batch geometry
+# ---------------------------------------------------------------------------
+#
+# jax.jit already caches per shape, but implicitly — a refactor that made
+# any argument shape vary per call would silently re-trace every planning
+# round. The memo below makes the contract explicit (one compiled callable
+# per batch geometry, held for the life of the process) and countable:
+# TRACE_COUNTS[name] increments only when a callable is actually traced,
+# so the regression test can assert two same-shape plan_many calls
+# compile exactly once.
 
-    T: (B, nf, nc) step times, W: (nf, nc) shared power grid, k: (B,)
-    per-workload objective exponent. Returns metric = (W·T)·T^k.
-    Note: compiles once per distinct batch size B (the jit cache persists,
-    so steady-state schedulers with stable batch sizes pay it once).
+_GRID_CALLABLE_CACHE: Dict[Tuple, object] = {}
+TRACE_COUNTS: Dict[str, int] = {"objective": 0, "plan_argmin": 0, "pareto": 0}
+
+
+def _objective_callable(shape: Tuple[int, int, int]):
+    """The (workload × frequency × cores) metric tensor in one jitted pass.
+
+    Returns a compiled ``fn(T, W, k) -> (W·T)·T^k`` for one batch geometry:
+    T (B, nf, nc) step times, W (nf, nc) shared power grid, k (B,)
+    per-workload objective exponent.
     """
-    T = jnp.maximum(T, TIME_FLOOR)
-    E = W[None, :, :] * T
-    return E * T ** k[:, None, None]
+    key = ("objective", shape)
+    fn = _GRID_CALLABLE_CACHE.get(key)
+    if fn is None:
+
+        @jax.jit
+        def fn(T: jnp.ndarray, W: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+            # trace-time side effect only: runs once per compile, never on
+            # the device path
+            TRACE_COUNTS["objective"] = TRACE_COUNTS["objective"] + 1
+            T = jnp.maximum(T, TIME_FLOOR)
+            E = W[None, :, :] * T
+            return E * T ** k[:, None, None]
+
+        _GRID_CALLABLE_CACHE[key] = fn
+    return fn
+
+
+def _plan_argmin_callable(shape: Tuple[int, int, int], impl: str):
+    """The fused metric+mask+argmin sweep (``kernels/plan_grid.py``) for one
+    batch geometry: ``fn(T2, W2, k, mask2) -> (B,) int32`` flat indices,
+    with T2/mask2 flattened to (B, nf·nc) C-order."""
+    key = ("plan_argmin", shape, impl)
+    fn = _GRID_CALLABLE_CACHE.get(key)
+    if fn is None:
+
+        @jax.jit
+        def fn(T2, W2, k, mask2):
+            TRACE_COUNTS["plan_argmin"] = TRACE_COUNTS["plan_argmin"] + 1
+            return kernel_ops.plan_argmin(
+                T2, W2, k, mask2, time_floor=TIME_FLOOR, impl=impl
+            )
+
+        _GRID_CALLABLE_CACHE[key] = fn
+    return fn
+
+
+def _pareto_callable(shape: Tuple[int, int, int], impl: str):
+    """The fused energy-tensor + frontier keep-set sweep for one batch
+    geometry: ``fn(T2, W2, mask2) -> (E2, kept)`` with E2 (B, G) f32 and
+    kept (B, G) bool. E2 = W·max(T, floor) is bitwise the k = 0 objective
+    tensor (E·T^0 multiplies by an exact 1.0), so frontier point values
+    read from it match the unfused path."""
+    key = ("pareto", shape, impl)
+    fn = _GRID_CALLABLE_CACHE.get(key)
+    if fn is None:
+
+        @jax.jit
+        def fn(T2, W2, mask2):
+            TRACE_COUNTS["pareto"] = TRACE_COUNTS["pareto"] + 1
+            T2 = jnp.maximum(T2, TIME_FLOOR)
+            E2 = W2 * T2
+            kept = kernel_ops.pareto_mask(T2, E2, mask2, impl=impl)
+            return E2, kept
+
+        _GRID_CALLABLE_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -348,11 +417,17 @@ class Workload:
     terms: Optional[RooflineTerms] = None  # explicit characterization override
     earliest_start_s: float = 0.0  # delay before the job can start (s)
 
-    @property
+    # cached_property (not property): schedulers re-present the same
+    # Workload objects round after round, and at 10k pending jobs the
+    # per-call key/name rebuilds were a measurable slice of the fused
+    # plan_many round. cached_property writes the instance __dict__
+    # directly, so it composes with frozen=True; equality/hash still read
+    # only the declared fields.
+    @functools.cached_property
     def shape_name(self) -> str:
         return self.cell.name if self.cell is not None else "custom"
 
-    @property
+    @functools.cached_property
     def key(self) -> Hashable:
         """Characterization-cache key: one SVR fit per workload family."""
         return self.terms if self.terms is not None else (self.arch, self.shape_name)
@@ -429,6 +504,7 @@ class _Fit:
     pae: float
     terms: RooflineTerms
     T: Optional[np.ndarray] = None  # (nf, nc), filled by the batched predict
+    t_base: Optional[float] = None  # race-to-idle step time, memoized
 
 
 # ---------------------------------------------------------------------------
@@ -451,10 +527,20 @@ class PlanningEngine:
         seed: int = 0,
         objective: str = "energy",
         on_infeasible: str = "fastest",
+        fused: bool = True,
+        rff_threshold: Optional[int] = None,
     ):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}")
         self.power = power_model
+        # fused=True routes plan_many/pareto_many through the
+        # kernels/plan_grid.py sweep; False replays the per-workload
+        # solve_grid path (the parity oracle and the benches' pre-fusion
+        # baseline arm). rff_threshold: sample count above which
+        # characterization fits switch to the linear-in-n RFF path
+        # (None = svr.RFF_THRESHOLD).
+        self.fused = bool(fused)
+        self.rff_threshold = rff_threshold
         self.freq_grid = tuple(float(f) for f in freq_grid)
         self.chip_grid = tuple(int(c) for c in chip_grid)
         self.chips_per_pod = chips_per_pod
@@ -470,6 +556,13 @@ class PlanningEngine:
         # power is application-agnostic: one grid shared by every workload
         self._W = np.asarray(
             self.power(jnp.asarray(F), jnp.asarray(C), jnp.asarray(self._pods))
+        )
+        # race-to-idle baseline power (max f, max chips): constant per
+        # engine, but the scalar PowerModel call is a device dispatch —
+        # paying it per plan dominated the 10k-workload round.
+        cmax = self.chip_grid[-1]
+        self._w_base = float(
+            self.power(self.freq_grid[-1], cmax, int(np.ceil(cmax / chips_per_pod)))
         )
         self._fits: Dict[Hashable, _Fit] = {}
 
@@ -558,13 +651,22 @@ class PlanningEngine:
         the cache is fitted in ONE ``svr.fit_many`` call (stacked training
         sets, one batched Gram build, batched KKT solves) and scored in one
         batched ``predict_each`` pass."""
-        missing: Dict[Hashable, RooflineTerms] = {}
-        for w in workloads:
-            if w.key not in self._fits and w.key not in missing:
-                missing[w.key] = self._terms_for(w)
+        keys = [w.key for w in workloads]  # the property once per item,
+        missing: Dict[Hashable, RooflineTerms] = {}  # not once per lookup
+        for key, w in zip(keys, workloads):
+            if key not in self._fits and key not in missing:
+                missing[key] = self._terms_for(w)
         if missing:
             sets = [self._training_set(t) for t in missing.values()]
-            models = svr_mod.fit_many(sets, **ENGINE_FIT_KW)
+            # method="auto": the engine's sweep sets are far below the RFF
+            # threshold so this stays on the exact dual solve; large
+            # installed telemetry windows (install_fit refits) go linear
+            models = svr_mod.fit_many(
+                sets,
+                method="auto",
+                rff_threshold=self.rff_threshold,
+                **ENGINE_FIT_KW,
+            )
             preds = svr_mod.predict_each(models, [x for x, _ in sets])
             for (key, terms), model, (x, y), pred in zip(
                 missing.items(), models, sets, preds
@@ -572,7 +674,7 @@ class PlanningEngine:
                 self._fits[key] = _Fit(
                     model=model, pae=svr_mod.pae_from_pred(pred, y), terms=terms
                 )
-        return [self._fits[w.key] for w in workloads]
+        return [self._fits[key] for key in keys]
 
     def _ensure_predictions(self, fits: Sequence[_Fit]) -> None:
         """Evaluate the step-time grid of every not-yet-predicted fit in one
@@ -592,17 +694,78 @@ class PlanningEngine:
 
     # -- planning -----------------------------------------------------------
 
-    def plan_many(self, workloads: Sequence[Workload]) -> List[EnergyPlan]:
+    @staticmethod
+    def _t_stack(fits: Sequence[_Fit]) -> np.ndarray:
+        """The (B, nf, nc) float64 step-time stack — built by stacking the
+        UNIQUE fits and gathering (a 10k-workload round typically spans a
+        handful of families; stacking 10k small arrays costs more than the
+        whole device sweep)."""
+        uniq: Dict[int, int] = {}
+        rows = []
+        inv = np.empty(len(fits), np.intp)
+        for i, f in enumerate(fits):
+            j = uniq.get(id(f))
+            if j is None:
+                j = uniq[id(f)] = len(rows)
+                rows.append(f.T)
+            inv[i] = j
+        stacked = np.stack(rows)
+        return stacked[inv] if len(rows) < len(fits) else stacked
+
+    def _mask_stack(
+        self, workloads: Sequence[Workload], T_stack: np.ndarray
+    ) -> np.ndarray:
+        """Every workload's ``constraint_mask`` in one vectorized pass.
+
+        Semantically identical to per-workload ``constraint_mask`` calls
+        (unset fields become infinite bounds, which are vacuous against a
+        finite grid), computed as four broadcast comparisons over the
+        (B, nf, nc) stack instead of B Python round-trips.
+        """
+        b = len(workloads)
+        max_t = np.full(b, np.inf)
+        max_c = np.full(b, np.inf)
+        min_f = np.full(b, -np.inf)
+        max_f = np.full(b, np.inf)
+        for i, w in enumerate(workloads):
+            c = w.effective_constraints()
+            if c is None:
+                continue
+            if c.max_time_s is not None:
+                max_t[i] = c.max_time_s
+            if c.max_cores is not None:
+                max_c[i] = c.max_cores
+            if c.min_frequency_ghz is not None:
+                min_f[i] = c.min_frequency_ghz
+            if c.max_frequency_ghz is not None:
+                max_f[i] = c.max_frequency_ghz
+        mask = T_stack <= max_t[:, None, None]
+        mask &= self._C[None, :, :] <= max_c[:, None, None]
+        mask &= self._F[None, :, :] >= min_f[:, None, None]
+        mask &= self._F[None, :, :] <= max_f[:, None, None]
+        return mask
+
+    def plan_many(
+        self, workloads: Sequence[Workload], *, fused: Optional[bool] = None
+    ) -> List[EnergyPlan]:
         """Plan every workload in one batched pass (paper Eq. 8, batched).
 
         One ``svr.fit_many`` over the cache-missing families, one batched
-        grid prediction (``svr.predict_many``), one jitted (workload ×
-        frequency × cores) objective tensor, then a masked argmin per
-        workload under its own ``Constraints``/objective.
+        grid prediction (``svr.predict_many``), then ONE fused
+        metric+mask+argmin device sweep (``kernels/plan_grid.py``) over the
+        (workload × frequency × cores) tensor — the compiled callable is
+        memoized on batch geometry, so steady-state rounds never re-trace.
+        ``fused=False`` (or constructing the engine with ``fused=False``)
+        replays the per-workload ``solve_grid`` path instead; both pick
+        bitwise-identical configs (the fused kernel reproduces the f32
+        metric expression and the first-minimum tie-break exactly), which
+        the parity tests and the scale bench assert.
 
         Args:
             workloads: planning requests; workloads sharing a ``key``
                 (same family) share one cached SVR fit.
+            fused: override the engine's fused/exact path choice for this
+                call (None = the engine default).
 
         Returns:
             ``EnergyPlan`` per workload, aligned with the input order.
@@ -628,16 +791,54 @@ class PlanningEngine:
                 )
         fits = self._fits_for(workloads)
         self._ensure_predictions(fits)
-        T_stack = jnp.asarray(np.stack([f.T for f in fits]), jnp.float32)
-        k = jnp.asarray([OBJECTIVES[obj] for obj in objectives], jnp.float32)
-        metric = np.asarray(
-            _objective_many(T_stack, jnp.asarray(self._W, jnp.float32), k),
-            np.float64,
-        )
-        return [
-            self._plan_one(w, f, metric[i])
-            for i, (w, f) in enumerate(zip(workloads, fits))
-        ]
+        T64 = self._t_stack(fits)  # (B, nf, nc) float64
+        b, nf, nc = T64.shape
+        T_stack = jnp.asarray(T64, jnp.float32)
+        W32 = jnp.asarray(self._W, jnp.float32)
+        k_np = np.asarray([OBJECTIVES[obj] for obj in objectives], np.float32)
+        if not (self.fused if fused is None else fused):
+            # exact arm: one objective tensor, one host argmin per workload
+            metric = np.asarray(
+                _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
+                np.float64,
+            )
+            return [
+                self._plan_one(w, f, metric[i])
+                for i, (w, f) in enumerate(zip(workloads, fits))
+            ]
+        mask = self._mask_stack(workloads, T64)
+        feasible = mask.any(axis=(1, 2))
+        sweep = _plan_argmin_callable((b, nf, nc), kernel_ops.resolve_impl(None))
+        flat = np.asarray(
+            sweep(
+                T_stack.reshape(b, nf * nc),
+                W32.reshape(1, nf * nc),
+                jnp.asarray(k_np),
+                jnp.asarray(mask.reshape(b, nf * nc)),
+            )
+        ).astype(np.int64)
+        if not feasible.all():
+            # empty mask: rare — route through solve_grid's on_infeasible
+            # semantics with the exact arm's metric slice, then patch the
+            # chosen flat index so the finish pass below stays unified
+            metric = np.asarray(
+                _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
+                np.float64,
+            )
+            for i in np.flatnonzero(~feasible):
+                w, fit = workloads[i], fits[i]
+                idx = solve_grid(
+                    self._F,
+                    self._C,
+                    fit.T,
+                    self._W,
+                    objective=objectives[i],
+                    constraints=w.effective_constraints(),
+                    on_infeasible=self.on_infeasible,
+                    metric=metric[i],
+                )
+                flat[i] = idx[0] * nc + idx[1]
+        return self._finish_plans(workloads, fits, objectives, flat, T64)
 
     def plan(self, workload: Workload) -> EnergyPlan:
         """Plan one workload — the B = 1 view of ``plan_many`` (one code
@@ -657,16 +858,20 @@ class PlanningEngine:
             on_infeasible=self.on_infeasible,
             metric=metric,
         )
+        return self._finish_plan(w, fit, idx, obj)
+
+    def _finish_plan(
+        self, w: Workload, fit: _Fit, idx: Tuple[int, int], obj: str
+    ) -> EnergyPlan:
+        """Materialize the ``EnergyPlan`` for one chosen grid index."""
         chips = int(self._C[idx])
         step_t = float(fit.T[idx])
         watts = float(self._W[idx])
-        # baseline: race-to-idle on the full slice (max chips, max f)
-        fmax = self.freq_grid[-1]
-        cmax = self.chip_grid[-1]
-        t_base = fit.terms.step_time(fmax, cmax)
-        w_base = float(
-            self.power(fmax, cmax, int(np.ceil(cmax / self.chips_per_pod)))
-        )
+        # baseline: race-to-idle on the full slice (max chips, max f);
+        # per-fit step time and the engine-constant baseline power are
+        # memoized — both were per-plan dispatches before the fused sweep.
+        if fit.t_base is None:
+            fit.t_base = fit.terms.step_time(self.freq_grid[-1], self.chip_grid[-1])
         return EnergyPlan(
             arch=w.arch,
             shape=w.shape_name,
@@ -677,7 +882,7 @@ class PlanningEngine:
             step_time_s=step_t,
             power_w=watts,
             energy_per_step_j=watts * step_t,
-            baseline_energy_j=t_base * w_base,
+            baseline_energy_j=fit.t_base * self._w_base,
             terms_source=fit.terms.source,
             svr_pae=fit.pae,
             objective=obj,
@@ -685,8 +890,80 @@ class PlanningEngine:
             total_energy_j=watts * step_t * w.n_steps,
         )
 
+    def _finish_plans(
+        self,
+        workloads: Sequence[Workload],
+        fits: Sequence[_Fit],
+        objectives: Sequence[str],
+        flat: np.ndarray,
+        T64: np.ndarray,
+    ) -> List[EnergyPlan]:
+        """Materialize every ``EnergyPlan`` from the flat chosen indices.
+
+        The batched twin of ``_finish_plan``: one fancy-index gather per
+        grid field instead of B×5 numpy scalar reads (which dominated the
+        10k-workload fused round), with the per-value arithmetic kept in
+        the exact per-plan expression order so the plans stay bitwise
+        identical to the scalar path."""
+        b = len(workloads)
+        freq_l = self._F.ravel()[flat].tolist()
+        chips_l = self._C.ravel()[flat].astype(np.int64).tolist()
+        pods_l = self._pods.ravel()[flat].astype(np.int64).tolist()
+        watts_l = self._W.ravel()[flat].tolist()
+        step_l = T64.reshape(b, -1)[np.arange(b), flat].tolist()
+        mesh_memo: Dict[int, tuple] = {}
+        # per-fit constants (baseline energy, provenance) hoisted out of the
+        # B-loop: a round spans a handful of families, not B of them
+        fit_memo: Dict[int, Tuple[float, str, float]] = {}
+        plans = []
+        for i, (w, fit) in enumerate(zip(workloads, fits)):
+            chips = chips_l[i]
+            mesh = mesh_memo.get(chips)
+            if mesh is None:
+                mesh = mesh_memo[chips] = _mesh_for_chips(chips)
+            hoisted = fit_memo.get(id(fit))
+            if hoisted is None:
+                if fit.t_base is None:
+                    fit.t_base = fit.terms.step_time(
+                        self.freq_grid[-1], self.chip_grid[-1]
+                    )
+                hoisted = fit_memo[id(fit)] = (
+                    fit.t_base * self._w_base,
+                    fit.terms.source,
+                    fit.pae,
+                )
+            base_e, source, pae = hoisted
+            step_t = step_l[i]
+            watts = watts_l[i]
+            e = watts * step_t
+            # fast-path construction: EnergyPlan is a plain dataclass (no
+            # __post_init__), and its 15-kwarg __init__ alone was ~1/3 of
+            # the fused 10k-plan round — build the instance dict directly.
+            # The keys here must stay in lockstep with the EnergyPlan
+            # fields (test_engine parity covers every field).
+            p = EnergyPlan.__new__(EnergyPlan)
+            p.__dict__ = {
+                "arch": w.arch,
+                "shape": w.shape_name,
+                "chips": chips,
+                "pods": pods_l[i],
+                "mesh": mesh,
+                "frequency_ghz": freq_l[i],
+                "step_time_s": step_t,
+                "power_w": watts,
+                "energy_per_step_j": e,
+                "baseline_energy_j": base_e,
+                "terms_source": source,
+                "svr_pae": pae,
+                "objective": objectives[i],
+                "n_steps": w.n_steps,
+                "total_energy_j": e * w.n_steps,
+            }
+            plans.append(p)
+        return plans
+
     def pareto_many(
-        self, workloads: Sequence[Workload]
+        self, workloads: Sequence[Workload], *, fused: Optional[bool] = None
     ) -> List[List[ParetoPoint]]:
         """The energy/time frontier of EVERY workload, one batched pass.
 
@@ -695,10 +972,13 @@ class PlanningEngine:
         them one ``pareto`` call at a time would re-pay the grid evaluation
         per job. This reuses exactly the ``plan_many`` machinery — one
         ``svr.fit_many`` over cache-missing families, one batched grid
-        prediction, and ONE jitted objective-tensor pass (``_objective_many``
-        with k = 0, i.e. the energy tensor E = W·T) — then extracts each
-        workload's frontier from its slice of the shared tensor. No per-job
-        re-trace, no per-job Gram build.
+        prediction, and ONE fused energy-tensor + keep-set device sweep
+        (the energy tensor E = W·T plus the pairwise dominance scan of
+        ``kernels/plan_grid.py``, memoized on batch geometry) — then
+        materializes each workload's frontier from its slice of the shared
+        tensor. No per-job re-trace, no per-job Gram build; ``fused=False``
+        replays the host ``pareto_frontier`` sweep (bitwise-identical
+        frontiers, asserted by the parity tests).
 
         Args:
             workloads: planning requests; each frontier honors ITS OWN
@@ -724,19 +1004,62 @@ class PlanningEngine:
             return []
         fits = self._fits_for(workloads)
         self._ensure_predictions(fits)
-        T_stack = jnp.asarray(np.stack([f.T for f in fits]), jnp.float32)
-        # E·T^0, i.e. the plain energy tensor. np.zeros, not jnp.zeros: the
-        # device zeros kernel would jit-compile once per batch size, turning
-        # the first frontier round of every new batch shape into a ~30 ms
-        # compile for a constant.
-        k = jnp.asarray(np.zeros(len(workloads), np.float32))
-        E_stack = np.asarray(
-            _objective_many(T_stack, jnp.asarray(self._W, jnp.float32), k),
-            np.float64,
+        T64 = self._t_stack(fits)  # (B, nf, nc) float64
+        b, nf, nc = T64.shape
+        T_stack = jnp.asarray(T64, jnp.float32)
+        W32 = jnp.asarray(self._W, jnp.float32)
+        if not (self.fused if fused is None else fused):
+            # E·T^0, i.e. the plain energy tensor. np.zeros, not jnp.zeros:
+            # the device zeros kernel would jit-compile once per batch
+            # size, turning the first frontier round of every new batch
+            # shape into a ~30 ms compile for a constant.
+            k = jnp.asarray(np.zeros(b, np.float32))
+            E_stack = np.asarray(
+                _objective_callable((b, nf, nc))(T_stack, W32, k), np.float64
+            )
+            return [
+                self._frontier_for(w, f, E_stack[i])
+                for i, (w, f) in enumerate(zip(workloads, fits))
+            ]
+        mask = self._mask_stack(workloads, T64)
+        feasible = mask.any(axis=(1, 2))
+        sweep = _pareto_callable((b, nf, nc), kernel_ops.resolve_impl(None))
+        E2, kept = sweep(
+            T_stack.reshape(b, nf * nc),
+            W32.reshape(1, nf * nc),
+            jnp.asarray(mask.reshape(b, nf * nc)),
         )
+        E_stack = np.asarray(E2, np.float64).reshape(b, nf, nc)
+        kept = np.asarray(kept)
+        out = []
+        for i, (w, fit) in enumerate(zip(workloads, fits)):
+            if feasible[i]:
+                out.append(self._frontier_from_kept(fit, E_stack[i], kept[i]))
+            else:
+                # empty mask: exact fallback (on_infeasible semantics)
+                out.append(self._frontier_for(w, fit, E_stack[i]))
+        return out
+
+    def _frontier_from_kept(
+        self, fit: _Fit, E: np.ndarray, kept_row: np.ndarray
+    ) -> List[ParetoPoint]:
+        """Materialize one frontier from the fused keep-set, in the same
+        fastest-first order as ``pareto_frontier`` (surviving points have
+        strictly distinct times, so the time sort is unambiguous)."""
+        flat_idx = np.flatnonzero(kept_row)
+        t_flat = fit.T.reshape(-1)[flat_idx]
+        order = np.argsort(t_flat, kind="stable")
+        nc = fit.T.shape[1]
         return [
-            self._frontier_for(w, f, E_stack[i])
-            for i, (w, f) in enumerate(zip(workloads, fits))
+            ParetoPoint(
+                frequency_ghz=float(self._F[r, c]),
+                chips=int(self._C[r, c]),
+                pods=int(self._pods[r, c]),
+                step_time_s=float(fit.T[r, c]),
+                power_w=float(self._W[r, c]),
+                energy_per_step_j=float(E[r, c]),
+            )
+            for r, c in ((int(f) // nc, int(f) % nc) for f in flat_idx[order])
         ]
 
     def pareto(self, workload: Workload) -> List[ParetoPoint]:

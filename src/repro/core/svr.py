@@ -37,7 +37,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rff as rff_mod
 from repro.kernels import ops
+
+# ``method="auto"`` switch point for fit_many: sets with at least this many
+# samples take the random-Fourier-feature path (linear in n) instead of the
+# exact O(n^3) dual solve. The engine's per-family sweeps (a few dozen
+# samples) stay exact, so default planner behavior is unchanged; drift
+# refits over large telemetry windows cross it and go linear.
+RFF_THRESHOLD = 1024
 
 
 @dataclasses.dataclass
@@ -389,6 +397,11 @@ def fit_many(
     log_target: bool = False,
     standardize: bool = False,
     ridge: float = 1e-3,
+    method: str = "exact",
+    rff_features: Optional[int] = None,
+    rff_seed: Optional[int] = None,
+    rff_ridge: Optional[float] = None,
+    rff_threshold: Optional[int] = None,
 ) -> list:
     """Fit B ε-SVR models in one batched pass — one model per training set.
 
@@ -414,6 +427,19 @@ def fit_many(
         log_target / standardize: the beyond-paper mode for features
             spanning orders of magnitude (the TPU planner / engine path).
         ridge: base conditioning ridge for the KKT solves.
+        method: ``"exact"`` (default) solves the ε-SVR dual; ``"rff"``
+            fits a random-Fourier-feature ridge approximation
+            (``core.rff``, linear in sample count); ``"auto"`` routes
+            each set by size — exact below ``rff_threshold`` samples
+            (default ``RFF_THRESHOLD``), RFF at or above it. Mixed
+            batches split, fit each way, and merge back in order.
+        rff_features / rff_seed / rff_ridge: RFF path knobs (feature
+            count D, deterministic spectral seed, relative ridge);
+            ``None`` takes the ``core.rff`` module defaults.
+
+    RFF-path models come back as ``rff.RFFParams`` (not ``SVRParams``);
+    ``predict`` / ``predict_many`` / ``predict_each`` dispatch on the
+    type, so downstream callers are agnostic.
 
     Returns:
         ``List[SVRParams]`` aligned with ``sets``; ``predict(model, x)``
@@ -434,6 +460,48 @@ def fit_many(
     pairs = [_as_xy(s) for s in sets]
     if not pairs:
         return []
+
+    if method not in ("exact", "rff", "auto"):
+        raise ValueError(f"unknown fit method: {method!r}")
+    if method != "exact":
+        thr = RFF_THRESHOLD if rff_threshold is None else int(rff_threshold)
+        use_rff = [
+            method == "rff" or int(np.shape(x)[0]) >= thr for x, _ in pairs
+        ]
+        if any(use_rff):
+            rff_kw = dict(
+                gamma=gamma,
+                log_target=log_target,
+                standardize=standardize,
+                n_features=rff_features,
+                seed=rff_seed,
+                ridge=rff_ridge,
+            )
+            if all(use_rff):
+                return rff_mod.fit_many_rff(pairs, **rff_kw)
+            # mixed batch: split by route, fit each side its own way,
+            # merge back into input order
+            rff_idx = [i for i, u in enumerate(use_rff) if u]
+            exact_idx = [i for i, u in enumerate(use_rff) if not u]
+            merged: list = [None] * len(pairs)
+            for i, m in zip(
+                rff_idx, rff_mod.fit_many_rff([pairs[i] for i in rff_idx], **rff_kw)
+            ):
+                merged[i] = m
+            exact_models = fit_many(
+                [pairs[i] for i in exact_idx],
+                C=C,
+                gamma=gamma,
+                eps=eps,
+                iters=iters,
+                impl=impl,
+                log_target=log_target,
+                standardize=standardize,
+                ridge=ridge,
+            )
+            for i, m in zip(exact_idx, exact_models):
+                merged[i] = m
+            return merged
 
     # preprocessing stays in numpy: per-item jnp dispatches here would eat
     # the batching win before the solver even runs. Same-shape batches (the
@@ -617,6 +685,8 @@ def fit(
 
 def predict(params: SVRParams, x: np.ndarray, *, impl: Optional[str] = None):
     """Predict raw-unit targets for raw-unit features x: (m, d)."""
+    if isinstance(params, rff_mod.RFFParams):
+        return rff_mod.predict(params, x)
     xs = (jnp.asarray(x, jnp.float32) - params.x_mean) / params.x_std
     K = ops.rbf_gram(xs, params.x_train, params.gamma, impl=impl)
     ys = K @ params.beta + params.bias
@@ -656,6 +726,13 @@ def predict_each(
     models = list(models)
     if not models:
         return []
+    if any(isinstance(m, rff_mod.RFFParams) for m in models):
+        # RFF models have no Gram build to batch (the homogeneity check
+        # below would also trip on the missing x_train); host matvecs for
+        # an all-RFF batch, per-model dispatch for a mixed one.
+        if all(isinstance(m, rff_mod.RFFParams) for m in models):
+            return rff_mod.predict_each(models, xs)
+        return [predict(m, q, impl=impl) for m, q in zip(models, xs)]
     m0 = models[0]
     q0 = np.shape(xs[0])
     homogeneous = all(

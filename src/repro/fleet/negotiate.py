@@ -15,9 +15,12 @@ The protocol per scheduling round:
 
 1. **Options** — every pending job's deterministic frontier (ONE batched
    ``PlanningEngine.pareto_many`` pass) is projected onto every node with
-   individual capacity via the shared ``cluster.project_point`` ("plan
-   energy × node skew"), giving each job a finite option set
-   (frontier point × node) with projected time (s) and energy (J).
+   individual capacity, giving each job a finite option set
+   (frontier point × node) with projected time (s) and energy (J). The
+   projection semantics are ``cluster.project_point`` ("plan energy ×
+   node skew"); since PR 7 the whole (frontier × pool) grid is evaluated
+   in one vectorized NumPy pass (``_project_grid``) that is
+   bitwise-identical to the per-pair scalar calls.
 2. **Seed** — the PR-3 cheapest-first greedy (deadline order, frontier
    walked cheapest → fastest, first deadline-feasible node, second pass
    without the deadline) is replayed on the option sets. The seed IS the
@@ -71,7 +74,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.fleet.cluster import CapacityProfile, NodePool, project_point, time_eps
+import numpy as np
+
+from repro.fleet.cluster import CapacityProfile, NodePool, time_eps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,29 +165,91 @@ class Negotiator:
 
     # -- option enumeration -------------------------------------------------
 
+    def _project_grid(self, terms, frontier):
+        """Vectorized ``project_point`` over the whole (frontier × pool)
+        grid: returns ``(f_snap, t_exp, e_exp)`` as (K, M) float64 arrays.
+
+        The per-pair ``project_point`` calls were the enumeration hotspot
+        at fleet scale (K·M function calls, each with a frequency-table
+        scan, roofline evaluations and an ``np.ceil`` dispatch). Here the
+        scalar-irregular pieces — frequency snap, believed step-time
+        ratio, the pow-bearing dynamic-power-per-core term, socket counts
+        — are memoized as PYTHON floats computed by the exact expressions
+        ``NodeSpec.expected_power`` / ``project_point`` use (libm pow vs
+        numpy's repeated-squaring fast path can differ by an ulp, so pow
+        never moves into array space), and only the remaining +,*,/
+        arithmetic runs as one NumPy pass in the same IEEE evaluation
+        order. Result: bitwise-identical options (locked by the parity
+        test in ``tests/test_negotiate.py``)."""
+        specs = [node.spec for node in self.pool]
+        kn, mn = len(frontier), len(specs)
+        f_snap = np.empty((kn, mn))
+        ratio = np.ones((kn, mn))  # exact 1.0 where no snap: multiplying
+        dpc = np.empty((kn, mn))  # by it reproduces the untouched t_ref
+        stat = np.empty(kn)
+        c1, c2, c3, c4 = self.power.c1, self.power.c2, self.power.c3, self.power.c4
+        snap_m: Dict = {}
+        ratio_m: Dict = {}
+        dpc_m: Dict = {}
+        sock_m: Dict = {}
+        for k, pt in enumerate(frontier):
+            f, c = pt.frequency_ghz, pt.chips
+            s = sock_m.get(c)
+            if s is None and specs:
+                s = sock_m[c] = specs[0].sockets(c)  # global CORES_PER_SOCKET
+            stat[k] = c3 + c4 * s if specs else 0.0
+            for m, spec in enumerate(specs):
+                key = (spec.freq_table, f)
+                fs = snap_m.get(key)
+                if fs is None:
+                    fs = snap_m[key] = spec.snap_frequency(f)
+                f_snap[k, m] = fs
+                if fs != f:
+                    rkey = (f, fs, c)
+                    r = ratio_m.get(rkey)
+                    if r is None:
+                        r = ratio_m[rkey] = terms.step_time(fs, c) / max(
+                            terms.step_time(f, c), 1e-12
+                        )
+                    ratio[k, m] = r
+                d = dpc_m.get(fs)
+                if d is None:
+                    d = dpc_m[fs] = c1 * fs**3 + c2 * fs
+                dpc[k, m] = d
+        chips = np.array([float(pt.chips) for pt in frontier])
+        t_ref = np.array([pt.step_time_s for pt in frontier])[:, None] * ratio
+        dyn = chips[:, None] * dpc
+        d_skew = np.array([s.dynamic_power_skew for s in specs])
+        s_skew = np.array([s.static_power_skew for s in specs])
+        pw = d_skew[None, :] * dyn + s_skew[None, :] * stat[:, None]
+        t_exp = t_ref * np.array([s.speed_skew for s in specs])[None, :]
+        return f_snap, t_exp, pw * t_exp
+
     def _options(
         self, terms, frontier, free: Sequence[int], slack_s: float
     ) -> List[Option]:
-        """Every (frontier point, node) pair with individual capacity,
-        projected via the one shared ``project_point`` definition."""
+        """Every (frontier point, node) pair with individual capacity —
+        projections from the one vectorized ``_project_grid`` pass, emitted
+        in the same deterministic (point-major, node-minor) order as the
+        scalar enumeration."""
+        if not frontier:
+            return []
+        f_snap, t_exp, e_exp = self._project_grid(terms, frontier)
         out: List[Option] = []
         for k, pt in enumerate(frontier):
-            for m, node in enumerate(self.pool):
+            for m in range(len(self.pool)):
                 if pt.chips > free[m]:
                     continue
-                f_snap, t_exp, e_exp = project_point(
-                    node.spec, self.power, terms, pt.chips,
-                    pt.frequency_ghz, pt.step_time_s,
-                )
+                t = float(t_exp[k, m])
                 out.append(
                     Option(
                         point_idx=k,
                         node_idx=m,
                         cores=pt.chips,
-                        frequency_ghz=f_snap,
-                        time_s=t_exp,
-                        energy_j=e_exp,
-                        meets_deadline=slack_s > 0 and t_exp <= slack_s,
+                        frequency_ghz=float(f_snap[k, m]),
+                        time_s=t,
+                        energy_j=float(e_exp[k, m]),
+                        meets_deadline=slack_s > 0 and t <= slack_s,
                     )
                 )
         return out
@@ -419,16 +486,17 @@ class Negotiator:
         confirmed reservation whose end is a gap candidate. Dynamic
         re-enumeration against the working profiles is the ROADMAP's
         multi-horizon candidate."""
+        if not frontier:
+            return []
+        f_snap_g, t_exp_g, e_exp_g = self._project_grid(terms, frontier)
         out: List[Option] = []
         for k, pt in enumerate(frontier):
-            for m, node in enumerate(self.pool):
-                prof = profiles[m]
+            for m, prof in enumerate(profiles):
                 if pt.chips > prof.max_cores:
                     continue
-                f_snap, t_exp, e_exp = project_point(
-                    node.spec, self.power, terms, pt.chips,
-                    pt.frequency_ghz, pt.step_time_s,
-                )
+                f_snap = float(f_snap_g[k, m])
+                t_exp = float(t_exp_g[k, m])
+                e_exp = float(e_exp_g[k, m])
                 n_slots = 0
                 for t in prof.gap_candidates(start_min):
                     # has_capacity, not free_over: memoized on the (never

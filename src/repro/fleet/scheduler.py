@@ -641,6 +641,8 @@ class FleetScheduler:
         for idx, node in enumerate(self.pool):
             if node.free_cores(now) < cores:
                 continue
+            # one point × M nodes for a single job's fallback placement —
+            # below the vectorization payoff  # repro: allow(vectorize-enumeration)
             f_snap, t_exp, e_exp = project_point(
                 node.spec, self.engine.power, terms, cores, f, ref_time_s
             )
@@ -847,7 +849,10 @@ class FleetScheduler:
                 dataclasses.replace(old, time_scale=scale, source="telemetry")
             )
         sets = [self._refit_set(t, fam) for t, fam in zip(new_terms, stale)]
-        models = svr_mod.fit_many(sets, **ENGINE_FIT_KW)  # ONE batch
+        # method="auto": small telemetry windows refit on the exact dual
+        # solve; windows past svr.RFF_THRESHOLD observations take the
+        # linear random-Fourier-feature path (one batch either way)
+        models = svr_mod.fit_many(sets, method="auto", **ENGINE_FIT_KW)
         preds = svr_mod.predict_each(models, [x for x, _ in sets])
         for fam, key, terms, model, (x, y), pred in zip(
             stale, keys, new_terms, models, sets, preds
@@ -917,6 +922,8 @@ class FleetScheduler:
             remaining_frac = 1.0 - elapsed / max(t_full, 1e-12)
             if remaining_frac < pol.min_remaining_frac:
                 continue
+            # one call per drift-flagged in-flight job (its CURRENT node
+            # only, no grid)  # repro: allow(vectorize-enumeration)
             _, _, e_full = project_point(
                 node.spec, self.engine.power, terms, c.placement.cores,
                 c.placement.frequency_ghz, terms.step_time(
@@ -966,6 +973,10 @@ class FleetScheduler:
                     free = node.free_cores(now, exclude_job=job.job_id)
                     if pt.chips > free:
                         continue
+                    # per-job free-cores gate interleaves with the
+                    # projection, and migrations are rare (gated by
+                    # min_drift) — the K·M win does not apply
+                    # repro: allow(vectorize-enumeration)
                     f_snap, t_exp, e_exp = project_point(
                         node.spec, self.engine.power, terms, pt.chips,
                         pt.frequency_ghz, pt.step_time_s,

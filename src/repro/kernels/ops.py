@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.int8_codec import int8_dequantize_pallas, int8_quantize_pallas
+from repro.kernels.plan_grid import pareto_mask_pallas, plan_argmin_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
 from repro.kernels.ssd_scan import ssd_chunks_pallas
 
@@ -72,6 +73,57 @@ def rbf_gram(x, y, gamma: float, *, impl: Optional[str] = None, block: int = 128
         block_n=block,
         block_m=block,
         interpret=(mode == "pallas_interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused planning-grid sweep (engine argmin / frontier)
+# ---------------------------------------------------------------------------
+
+
+def plan_argmin(
+    t, w, k, mask, *, time_floor: float, impl: Optional[str] = None
+):
+    """Masked objective argmin per batch row; t (B, G), w (G,)/(1, G),
+    k (B,), mask (B, G) -> (B,) int32 first-minimum flat indices.
+
+    Fuses the engine's metric build ((W·T)·T^k, T floored), constraint
+    masking and argmin. The f32 metric matches ``engine._objective``'s
+    expression order bitwise, and ties break to the first flat index —
+    ``np.argmin`` over the unfused tensor picks the identical config.
+    """
+    mode = resolve_impl(impl)
+    t = jnp.asarray(t, jnp.float32)
+    w2 = jnp.asarray(w, jnp.float32).reshape(1, -1)
+    k = jnp.asarray(k, jnp.float32)
+    m = jnp.asarray(mask)
+    if mode == "ref":
+        return ref.plan_argmin_ref(t, w2, k, m, time_floor=time_floor)
+    return plan_argmin_pallas(
+        t,
+        w2,
+        k,
+        m.astype(jnp.float32),
+        time_floor=float(time_floor),
+        interpret=(mode == "pallas_interpret"),
+    )
+
+
+def pareto_mask(t, e, mask, *, impl: Optional[str] = None):
+    """Pareto keep-set per batch row; t, e, mask (B, G) -> (B, G) bool.
+
+    Same dominance semantics (and flat-index tie-break) as the host
+    ``engine.pareto_frontier`` lexsort + cummin sweep; non-finite or
+    masked-out points never survive.
+    """
+    mode = resolve_impl(impl)
+    t = jnp.asarray(t, jnp.float32)
+    e = jnp.asarray(e, jnp.float32)
+    m = jnp.asarray(mask)
+    if mode == "ref":
+        return ref.pareto_mask_ref(t, e, m)
+    return pareto_mask_pallas(
+        t, e, m.astype(jnp.float32), interpret=(mode == "pallas_interpret")
     )
 
 

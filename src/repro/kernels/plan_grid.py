@@ -1,0 +1,137 @@
+"""Pallas TPU kernels: the fused planning-grid sweep of ``core/engine.py``.
+
+A planning round evaluates, for every pending workload, the objective
+metric (W·T)·T^k over the shared (frequency × cores) grid, masks the
+points its ``Constraints`` forbid, and takes either the argmin (plan) or
+the pareto keep-set (frontier). At 10^4-10^5 workloads the unfused path
+pays one host argmin + mask build per workload; these kernels do the
+whole (B, G) sweep — metric build, masking, reduction — in one pass,
+with the metric expression ordered exactly like the engine's objective
+tensor so the chosen (f, cores) configs stay bitwise identical.
+
+Layout: the grid is flattened C-order to G = nf·nc and padded to the
+128-lane width; G is tiny (a few dozen points), so each program instance
+holds its full (block_b, G) slab in VMEM. The argmin kernel reduces over
+lanes with the min/iota trick (first-minimum tie-break, ``np.argmin``
+semantics); the frontier kernel materializes the (G, G) pairwise
+dominance matrix per row — G^2 is ~16K lanes of VPU work, far below any
+VMEM concern.
+
+Reference oracles: ``ref.plan_argmin_ref`` / ``ref.pareto_mask_ref``
+(the CPU compute path and the interpret-mode test ground truth),
+dispatched by ``ops.py`` like every other kernel in this package.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plan_argmin_kernel(t_ref, w_ref, k_ref, m_ref, o_ref, *, time_floor: float):
+    t = jnp.maximum(t_ref[...], jnp.float32(time_floor))  # (bb, G)
+    e = w_ref[...] * t  # (1, G) * (bb, G)
+    metric = e * t ** k_ref[:, :1]  # VPU pow; k col 0 broadcast over lanes
+    masked = jnp.where(m_ref[...] > 0.0, metric, jnp.float32(jnp.inf))
+    mn = jnp.min(masked, axis=1, keepdims=True)  # (bb, 1)
+    g = masked.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, masked.shape, 1)
+    idx = jnp.min(jnp.where(masked == mn, lanes, g), axis=1, keepdims=True)
+    o_ref[...] = jnp.broadcast_to(idx, o_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("time_floor", "block_b", "interpret")
+)
+def plan_argmin_pallas(
+    t: jnp.ndarray,  # (B, G) step times
+    w: jnp.ndarray,  # (1, G) shared power grid
+    k: jnp.ndarray,  # (B,)   objective exponents
+    mask: jnp.ndarray,  # (B, G) feasibility as 0/1 float
+    *,
+    time_floor: float,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """First flat index of the masked objective minimum -> (B,) int32."""
+    b, g = t.shape
+    bb = block_b
+    pad_b = (-b) % bb
+    pad_g = (-g) % 128
+    # padded lanes carry mask 0 -> +inf metric; padded rows are sliced off
+    tp = jnp.pad(t.astype(jnp.float32), ((0, pad_b), (0, pad_g)), constant_values=1.0)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, pad_g)), constant_values=1.0)
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, pad_b), (0, pad_g)))
+    bp, gp = tp.shape
+    # k rides in as a (bp, 128) lane-replicated slab: scalars-per-row in
+    # SMEM would need a (1, 1) spec per row; replication is 512 B/row.
+    kp = jnp.pad(k.astype(jnp.float32), (0, pad_b))
+    k2 = jnp.broadcast_to(kp[:, None], (bp, 128))
+
+    out = pl.pallas_call(
+        functools.partial(_plan_argmin_kernel, time_floor=time_floor),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, gp), lambda i: (i, 0)),
+            pl.BlockSpec((1, gp), lambda i: (0, 0)),
+            pl.BlockSpec((bb, 128), lambda i: (i, 0)),
+            pl.BlockSpec((bb, gp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 128), jnp.int32),
+        interpret=interpret,
+    )(tp, wp, k2, mp)
+    return out[:b, 0]
+
+
+def _pareto_mask_kernel(t_ref, e_ref, m_ref, o_ref):
+    t = t_ref[...]  # (1, G)
+    e = e_ref[...]
+    feas = (m_ref[...] > 0.0) & jnp.isfinite(t) & jnp.isfinite(e)
+    g = t.shape[1]
+    tq = jnp.reshape(t, (g, 1))  # q down the sublanes, p across the lanes
+    eq = jnp.reshape(e, (g, 1))
+    fq = jnp.reshape(feas, (g, 1))
+    iq = jax.lax.broadcasted_iota(jnp.int32, (g, g), 0)
+    ip = jax.lax.broadcasted_iota(jnp.int32, (g, g), 1)
+    beats = fq & (
+        ((tq < t) & (eq <= e))
+        | ((tq == t) & (eq < e))
+        | ((tq == t) & (eq == e) & (iq < ip))
+    )
+    dominated = jnp.max(beats.astype(jnp.int32), axis=0, keepdims=True) > 0
+    o_ref[...] = (feas & ~dominated).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pareto_mask_pallas(
+    t: jnp.ndarray,  # (B, G) step times
+    e: jnp.ndarray,  # (B, G) energies
+    mask: jnp.ndarray,  # (B, G) feasibility as 0/1 float
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pareto keep-set per batch row -> (B, G) bool (one program per row)."""
+    b, g = t.shape
+    pad_g = (-g) % 128
+    tp = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, pad_g)), constant_values=1.0)
+    ep = jnp.pad(e.astype(jnp.float32), ((0, 0), (0, pad_g)), constant_values=1.0)
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, pad_g)))
+    gp = tp.shape[1]
+
+    out = pl.pallas_call(
+        _pareto_mask_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, gp), lambda i: (i, 0)),
+            pl.BlockSpec((1, gp), lambda i: (i, 0)),
+            pl.BlockSpec((1, gp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, gp), jnp.int32),
+        interpret=interpret,
+    )(tp, ep, mp)
+    return out[:, :g] > 0

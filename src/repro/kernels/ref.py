@@ -32,6 +32,65 @@ def rbf_gram_ref(x: jnp.ndarray, y: jnp.ndarray, gamma: float) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Fused planning-grid sweep (the engine's argmin / frontier hot path)
+# ---------------------------------------------------------------------------
+
+
+def plan_argmin_ref(
+    t: jnp.ndarray,  # (B, G) step times, G = nf * nc flattened C-order
+    w: jnp.ndarray,  # (1, G) shared power grid
+    k: jnp.ndarray,  # (B,)   per-workload objective exponent
+    mask: jnp.ndarray,  # (B, G) feasibility (bool or 0/1 float)
+    *,
+    time_floor: float,
+) -> jnp.ndarray:
+    """First flat index of the masked objective minimum, per batch row.
+
+    Fuses what ``core/engine.py`` historically ran as separate ops: the
+    metric tensor (W·T)·T^k, the constraint mask, and the argmin. The
+    expression order matches the engine's objective tensor exactly so the
+    f32 metric values — and therefore the chosen (f, cores) configs — are
+    bitwise identical to the unfused path. Ties break to the FIRST flat
+    index (``np.argmin`` semantics); an all-masked row returns 0 (callers
+    detect emptiness host-side and take the infeasible fallback).
+    """
+    t = jnp.maximum(t.astype(jnp.float32), jnp.float32(time_floor))
+    e = w.astype(jnp.float32) * t
+    metric = e * t ** k.astype(jnp.float32)[:, None]
+    masked = jnp.where(mask > 0, metric, jnp.float32(jnp.inf))
+    return jnp.argmin(masked, axis=1).astype(jnp.int32)
+
+
+def pareto_mask_ref(
+    t: jnp.ndarray,  # (B, G) step times
+    e: jnp.ndarray,  # (B, G) energies
+    mask: jnp.ndarray,  # (B, G) feasibility (bool or 0/1 float)
+) -> jnp.ndarray:
+    """Pareto-frontier membership per batch row (bool, shape (B, G)).
+
+    A point survives iff it is feasible, finite in both axes, and no other
+    feasible point weakly dominates it — with the same deterministic
+    tie-break as ``engine.pareto_frontier`` (equal (t, e) pairs keep only
+    the lowest flat index). The O(G^2) pairwise test is algebraically
+    identical to the host lexsort + cummin sweep: a point is dropped there
+    iff some point sorted strictly before it has energy <= its own, which
+    is exactly the dominance predicate below.
+    """
+    feas = (mask > 0) & jnp.isfinite(t) & jnp.isfinite(e)
+    tq, tp = t[:, :, None], t[:, None, :]  # q on axis 1, p on axis 2
+    eq, ep = e[:, :, None], e[:, None, :]
+    g = t.shape[1]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (g, g), 0)[None]
+    ip = jax.lax.broadcasted_iota(jnp.int32, (g, g), 1)[None]
+    beats = feas[:, :, None] & (
+        ((tq < tp) & (eq <= ep))
+        | ((tq == tp) & (eq < ep))
+        | ((tq == tp) & (eq == ep) & (iq < ip))
+    )
+    return feas & ~jnp.any(beats, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (chunked online softmax; causal / sliding-window / full)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,23 @@
+"""Fixture: per-pair project_point in enumeration loops —
+vectorize-enumeration fires twice (nested for-loop and comprehension)."""
+
+
+def enumerate_options(pool, power, terms, frontier):
+    out = []
+    for pt in frontier:
+        for node in pool:
+            out.append(
+                project_point(
+                    node.spec, power, terms, pt.chips,
+                    pt.frequency_ghz, pt.step_time_s,
+                )
+            )
+    return out
+
+
+def score_nodes(pool, power, terms, pt):
+    return [
+        project_point(n.spec, power, terms, pt.chips, pt.frequency_ghz,
+                      pt.step_time_s)
+        for n in pool
+    ]

@@ -1,0 +1,16 @@
+"""Fixture: one vectorized projection pass per enumeration — quiet.
+
+A single project_point call OUTSIDE any loop (the one-off migration
+probe) is also fine: the rule targets the K·M per-pair pattern.
+"""
+
+
+def enumerate_options(negotiator, terms, frontier):
+    f_snap, t_exp, e_exp = negotiator._project_grid(terms, frontier)
+    return list(zip(f_snap.ravel(), t_exp.ravel(), e_exp.ravel()))
+
+
+def probe_one(node, power, terms, pt):
+    return project_point(
+        node.spec, power, terms, pt.chips, pt.frequency_ghz, pt.step_time_s
+    )

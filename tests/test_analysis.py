@@ -45,6 +45,8 @@ RULE_FIXTURES = [
     ("argmin-ownership", "core/argmin_bad.py", 1, "core/engine.py"),
     ("epsilon-discipline", "fleet/epsilon_bad.py", 2, "fleet/epsilon_good.py"),
     ("batched-hot-path", "fleet/hotpath_bad.py", 2, "fleet/hotpath_good.py"),
+    ("vectorize-enumeration", "fleet/enumeration_bad.py", 2,
+     "fleet/enumeration_good.py"),
     ("cache-key-frozen", "cachekey_bad.py", 4, "cachekey_good.py"),
     ("jit-purity", "jit_bad.py", 3, "jit_good.py"),
     ("unit-suffix", "units_bad.py", 3, "units_good.py"),

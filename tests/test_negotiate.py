@@ -464,3 +464,93 @@ def test_artifact_family_recharacterizes_from_telemetry(tmp_path):
     assert refreshed is not None
     assert refreshed.source == "telemetry"
     assert refreshed.time_scale > 1.2  # learned the ~1.7x slowdown
+
+
+# ---------------------------------------------------------------------------
+# vectorized projection grid: bitwise parity with per-pair project_point
+# ---------------------------------------------------------------------------
+
+
+def _hetero_pool():
+    """Heterogeneous specs on purpose: distinct frequency tables (snap and
+    time-ratio paths), distinct skews, distinct core caps — every branch of
+    the vectorized projection sees a non-trivial value."""
+    specs = [
+        NodeSpec("ref", max_cores=32),
+        NodeSpec(
+            "slow", max_cores=16, freq_table=(1.2, 1.7),
+            static_power_skew=0.9, dynamic_power_skew=1.1, speed_skew=1.15,
+        ),
+        NodeSpec(
+            "eff", max_cores=8, freq_table=(0.8, 1.2, 2.2),
+            static_power_skew=0.7, dynamic_power_skew=0.85, speed_skew=1.05,
+        ),
+    ]
+    pool = NodePool([FleetNode(s, seed=i) for i, s in enumerate(specs)])
+    return pool, specs, PowerModel(6.0, 2.0, 25.0, 11.0)
+
+
+def _crafted_frontier():
+    terms = family_key("raytrace", 1.0)
+    pts = []
+    for f in (1.2, 1.7, 2.2):
+        for c in (2, 4, 8, 16):
+            pts.append(
+                ParetoPoint(
+                    frequency_ghz=f, chips=c, pods=1,
+                    step_time_s=terms.step_time(f, c),
+                    power_w=0.0, energy_per_step_j=0.0,
+                )
+            )
+    return terms, pts
+
+
+def test_project_grid_bitwise_matches_project_point():
+    from repro.fleet.cluster import project_point
+    from repro.fleet.negotiate import Negotiator
+
+    pool, specs, pm = _hetero_pool()
+    neg = Negotiator(pool, pm)
+    terms, frontier = _crafted_frontier()
+    f_snap, t_exp, e_exp = neg._project_grid(terms, frontier)
+    assert f_snap.shape == t_exp.shape == e_exp.shape == (len(frontier), len(specs))
+    for k, pt in enumerate(frontier):
+        for m, spec in enumerate(specs):
+            fs, t, e = project_point(
+                spec, pm, terms, pt.chips, pt.frequency_ghz, pt.step_time_s
+            )
+            # == not allclose: the vectorized pass must be bitwise exact
+            assert f_snap[k, m] == fs, (k, m)
+            assert t_exp[k, m] == t, (k, m)
+            assert e_exp[k, m] == e, (k, m)
+
+
+def test_options_bitwise_match_scalar_enumeration():
+    from repro.fleet.cluster import project_point
+    from repro.fleet.negotiate import Negotiator, Option
+
+    pool, specs, pm = _hetero_pool()
+    neg = Negotiator(pool, pm)
+    terms, frontier = _crafted_frontier()
+    free = [32, 6, 8]
+    slack = float(terms.step_time(1.7, 8)) * 1.1  # splits meets_deadline
+    got = neg._options(terms, frontier, free, slack)
+
+    want = []  # the pre-vectorization per-pair loop, replayed verbatim
+    for k, pt in enumerate(frontier):
+        for m, node in enumerate(pool):
+            if pt.chips > free[m]:
+                continue
+            fs, t, e = project_point(
+                node.spec, pm, terms, pt.chips, pt.frequency_ghz, pt.step_time_s
+            )
+            want.append(
+                Option(
+                    point_idx=k, node_idx=m, cores=pt.chips,
+                    frequency_ghz=fs, time_s=t, energy_j=e,
+                    meets_deadline=slack > 0 and t <= slack,
+                )
+            )
+    assert got == want  # frozen dataclass: order AND exact float equality
+    assert any(o.meets_deadline for o in got)
+    assert not all(o.meets_deadline for o in got)

@@ -1,0 +1,208 @@
+"""Random-Fourier-feature characterization (PR 7): the linear-in-n fit
+path behind ``svr.fit_many(method="rff"/"auto")``.
+
+Contracts under test:
+
+* accuracy — the RFF surface agrees with the exact ε-SVR surface to a few
+  percent on smooth step-time data, and its kernel approximation
+  E[z(x)·z(y)] ≈ exp(-γ‖x−y‖²) holds at the shipped feature count;
+* determinism — same data + seed ⇒ bitwise-identical weights (the fits
+  are cache keys in the engine; a nondeterministic refit would thrash);
+* routing — ``method="auto"`` switches per-SET at the sample threshold,
+  mixed batches merge back in input order, and the threshold is
+  overridable (kwarg and engine-level);
+* planner agreement — an all-RFF engine picks the SAME (f, cores)
+  configs as the exact engine on the shipped workload families (the
+  acceptance gate: speed must not move chosen configurations);
+* the drift-refit e2e: a large telemetry window routed through
+  ``method="auto"`` yields an RFF model that installs via
+  ``install_fit`` and plans through the batched grid prediction.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.core import rff, svr
+from repro.core.engine import ENGINE_FIT_KW, PlanningEngine, Workload
+
+RNG = np.random.default_rng(0)
+
+
+def _surface(n, seed=0, noise=0.01):
+    """A step-time-like surface over (f GHz, cores): smooth, positive."""
+    rng = np.random.default_rng(seed)
+    f = rng.uniform(0.6, 1.1, n)
+    c = rng.choice([8.0, 16.0, 64.0, 128.0, 256.0, 512.0], n)
+    x = np.stack([f, c], 1).astype(np.float32)
+    y = (0.05 / (f * c**0.7) * (1 + rng.normal(0, noise, n))).astype(np.float32)
+    return x, y
+
+
+FIT_KW = dict(gamma=0.5, standardize=True, log_target=True)
+
+
+# ---------------------------------------------------------------------------
+# accuracy and math
+# ---------------------------------------------------------------------------
+
+
+def test_featurize_approximates_rbf_kernel():
+    d = 3
+    w, b = rff.sample_projection(d, 4096, gamma=0.5, seed=0)
+    x = RNG.normal(size=(40, d))
+    z = rff.featurize(x, w, b)
+    K_hat = z @ z.T
+    d2 = ((x[:, None] - x[None]) ** 2).sum(-1)
+    K = np.exp(-0.5 * d2)
+    assert np.abs(K_hat - K).max() < 0.06
+
+
+def test_rff_fit_close_to_exact_on_step_time_surface():
+    x, y = _surface(600)
+    exact = svr.fit_many([(x, y)], **FIT_KW)[0]
+    approx = svr.fit_many([(x, y)], method="rff", **FIT_KW)[0]
+    assert isinstance(approx, rff.RFFParams)
+    q, _ = _surface(200, seed=9)
+    pe = np.asarray(svr.predict(exact, q), np.float64)
+    pr = np.asarray(svr.predict(approx, q), np.float64)
+    assert np.max(np.abs(pr - pe) / pe) < 0.10
+    # and the RFF fit stands on its own against the ground truth
+    assert svr.pae(approx, x, y) < 0.05
+
+
+def test_cg_solver_matches_direct():
+    # agreement is asserted in PREDICTION space: the ridge system is
+    # ill-conditioned in weight space (n < D routes direct through the
+    # dual), so individual coefficients differ harmlessly at ~1e-4
+    x, y = _surface(300)
+    direct = svr.fit_many([(x, y)], method="rff", **FIT_KW)[0]
+    cg = rff.fit_many_rff([(x, y)], solver="cg", **FIT_KW)[0]
+    q, _ = _surface(50, seed=9)
+    pd = np.asarray(svr.predict(direct, q), np.float64)
+    pc = np.asarray(svr.predict(cg, q), np.float64)
+    assert np.max(np.abs(pc - pd) / pd) < 1e-6
+
+
+def test_rff_fit_is_deterministic():
+    x, y = _surface(256)
+    a = svr.fit_many([(x, y)], method="rff", **FIT_KW)[0]
+    b = svr.fit_many([(x, y)], method="rff", **FIT_KW)[0]
+    np.testing.assert_array_equal(a.beta, b.beta)
+    np.testing.assert_array_equal(a.w_proj, b.w_proj)
+    assert a.bias == b.bias
+    c = svr.fit_many([(x, y)], method="rff", rff_seed=1, **FIT_KW)[0]
+    assert not np.array_equal(a.w_proj, c.w_proj)  # the seed is real
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_auto_routes_per_set_by_sample_count():
+    small = _surface(64, seed=1)
+    big = _surface(svr.RFF_THRESHOLD, seed=2)
+    models = svr.fit_many([small, big], method="auto", **FIT_KW)
+    assert isinstance(models[0], svr.SVRParams)
+    assert isinstance(models[1], rff.RFFParams)
+
+
+def test_mixed_batch_preserves_input_order():
+    sets = [
+        _surface(64, seed=1),
+        _surface(2000, seed=2),
+        _surface(80, seed=3),
+        _surface(3000, seed=4),
+    ]
+    mixed = svr.fit_many(sets, method="auto", **FIT_KW)
+    assert [isinstance(m, rff.RFFParams) for m in mixed] == [
+        False, True, False, True,
+    ]
+    # each model must be THE fit of its own set, not a permuted sibling
+    for (x, y), m in zip(sets, mixed):
+        assert svr.pae(m, x, y) < 0.05
+
+
+def test_threshold_override_kwarg():
+    x, y = _surface(128)
+    lo = svr.fit_many([(x, y)], method="auto", rff_threshold=100, **FIT_KW)[0]
+    hi = svr.fit_many([(x, y)], method="auto", rff_threshold=200, **FIT_KW)[0]
+    assert isinstance(lo, rff.RFFParams)
+    assert isinstance(hi, svr.SVRParams)
+
+
+def test_unknown_method_raises():
+    x, y = _surface(32)
+    with pytest.raises(ValueError, match="unknown fit method"):
+        svr.fit_many([(x, y)], method="svd", **FIT_KW)
+
+
+def test_predict_each_dispatches_mixed_models():
+    x, y = _surface(300)
+    exact = svr.fit_many([(x, y)], **FIT_KW)[0]
+    approx = svr.fit_many([(x, y)], method="rff", **FIT_KW)[0]
+    q, _ = _surface(50, seed=7)
+    per = [np.asarray(svr.predict(m, q)) for m in (exact, approx)]
+    batched = svr.predict_each([exact, approx], [q, q])
+    for want, got in zip(per, batched):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# planner agreement + the install_fit drift-refit path
+# ---------------------------------------------------------------------------
+
+
+def test_planner_configs_agree_exact_vs_rff(fleet_pm):
+    """The PR's acceptance gate: forcing EVERY characterization through
+    the RFF path must not move any chosen (f, cores) on the shipped
+    families (the engine sweep sets are ~66 samples, so rff_threshold=1
+    is the only way to exercise RFF end-to-end here)."""
+    ws = []
+    for arch, shape in [
+        ("qwen1.5-110b", "train_4k"),
+        ("gemma3-12b", "prefill_32k"),
+        ("starcoder2-3b", "train_4k"),
+        ("mamba2-130m", "train_4k"),
+    ]:
+        cell = SHAPES[shape]
+        ws.append(Workload(arch, cell))
+        ws.append(Workload(arch, cell, objective="edp"))
+    exact_eng = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    rff_eng = PlanningEngine(fleet_pm, noise=0.01, seed=0, rff_threshold=1)
+    exact_cfg = [(p.frequency_ghz, p.chips) for p in exact_eng.plan_many(ws)]
+    rff_cfg = [(p.frequency_ghz, p.chips) for p in rff_eng.plan_many(ws)]
+    assert exact_cfg == rff_cfg
+
+
+def test_install_fit_drift_refit_goes_linear_and_plans(fleet_pm):
+    """The large-telemetry-window refit e2e: fit via the same
+    ``method="auto"`` call the scheduler's ``_refresh_stale`` makes,
+    confirm the window size routes to RFF, install through
+    ``install_fit`` and plan through the batched grid prediction."""
+    from repro.core.engine import RooflineTerms
+
+    terms = RooflineTerms(
+        compute_s=0.02, memory_s=0.008, collective_s=0.004, source="telemetry"
+    )
+    rng = np.random.default_rng(3)
+    n = svr.RFF_THRESHOLD + 200
+    f = rng.uniform(0.6, 1.1, n)
+    c = rng.choice([8.0, 64.0, 256.0, 512.0], n)
+    x = np.stack([f, c], 1).astype(np.float32)
+    y = np.asarray(
+        [terms.step_time(float(fi), int(ci)) for fi, ci in zip(f, c)],
+        np.float32,
+    ) * (1 + rng.normal(0, 0.01, n).astype(np.float32))
+    models = svr.fit_many([(x, y)], method="auto", **ENGINE_FIT_KW)
+    assert isinstance(models[0], rff.RFFParams)
+
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0)
+    w = Workload("drifted", terms=terms)
+    eng.install_fit(w.key, models[0], svr.pae(models[0], x, y), terms)
+    plan = eng.plan(w)  # exercises predict_many over the installed model
+    assert plan.step_time_s > 0 and plan.svr_pae < 0.05
+    # the installed fit was USED, not silently re-characterized away
+    assert eng.cached_terms(w.key) is terms
+    assert eng._fits[w.key].model is models[0]

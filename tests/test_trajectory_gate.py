@@ -23,13 +23,16 @@ gate = importlib.util.module_from_spec(spec)
 spec.loader.exec_module(gate)
 
 
-def entry(speedup, look=1.3, quick=False):
+def entry(speedup, look=1.3, quick=False, scale=None):
+    results = {
+        "fleet": {"speedup": speedup, "lookahead_overhead_ratio": look}
+    }
+    if scale is not None:
+        results["engine_scale"] = {"scale_speedup": scale}
     return {
         "run_at": "2026-01-01T00:00:00",
         "quick": quick,
-        "results": {
-            "fleet": {"speedup": speedup, "lookahead_overhead_ratio": look}
-        },
+        "results": results,
     }
 
 
@@ -48,6 +51,19 @@ def test_overhead_cliff_fails():
     history = [entry(12.0, look=r) for r in (1.3, 1.2, 1.3, 1.25, 1.9)]
     problems = gate.check(history, 0.20)
     assert len(problems) == 1 and "lookahead_overhead_ratio" in problems[0]
+
+
+def test_engine_scale_cliff_fails():
+    history = [entry(12.0, scale=s) for s in (5.5, 6.0, 5.8, 5.6, 3.0)]
+    problems = gate.check(history, 0.20)
+    assert len(problems) == 1 and "engine_scale.scale_speedup" in problems[0]
+
+
+def test_missing_engine_scale_section_is_not_a_failure():
+    # histories predating the scale bench (or runs without it) never gate
+    history = [entry(s) for s in (14.0, 15.0, 13.0, 14.5)]
+    history.append(entry(14.0, scale=6.0))  # first entry WITH the section
+    assert gate.check(history, 0.20) == []
 
 
 def test_thin_history_never_gates():
