@@ -83,6 +83,12 @@ def _run_analysis(quick: bool) -> None:
     bench_analysis.run(quick=quick)
 
 
+def _run_obs(quick: bool) -> None:
+    from benchmarks import bench_obs
+
+    bench_obs.run()
+
+
 # name -> runner; insertion order is execution order for a full run
 BENCHES = {
     "kernels": _run_kernels,
@@ -94,6 +100,7 @@ BENCHES = {
     "svr_fit": _run_svr_fit,
     "fleet": _run_fleet,
     "analysis": _run_analysis,
+    "obs": _run_obs,
 }
 
 

@@ -10,12 +10,20 @@ the LATEST entry's fleet metrics regress more than ``--threshold``
   lower is better)
 * ``engine_scale.scale_speedup`` (fused Pallas sweep vs the exact
   batched path at the largest B; higher is better)
+* ``obs.overhead_ratio`` / ``obs.null_overhead_ratio`` (flight-recorder
+  cost on the scheduling round, recording and default-off)
 
 The reference is the **median of the prior comparable entries** (same
 ``quick`` flag), not the best-ever entry: single-shot container timings
 in the shipped history swing ±25% run to run, so a best-ever ratchet
 monotonically tightens until a healthy run fails. The median tracks the
 typical machine instead and still catches a real 20% cliff.
+
+A metric may additionally carry an **absolute ceiling** — a design
+budget, not a trend (the obs overhead contract: recording ≤ 3% of a
+round, the default-off null path ≤ 0.5%). Ceilings gate the latest
+entry whenever the metric is present, even on thin history: a budget
+does not need priors to be violated.
 
 Exit codes: 0 = ok (or not enough history to judge), 1 = regression,
 2 = unreadable trajectory file.
@@ -31,11 +39,15 @@ from typing import List, Optional, Sequence, Tuple
 
 DEFAULT_PATH = "experiments/bench/trajectory.json"
 
-# (results section, metric key, direction): +1 = higher is better
-METRICS: Tuple[Tuple[str, str, int], ...] = (
+# (results section, metric key, direction[, ceiling]): +1 = higher is
+# better; an optional 4th element is an absolute ceiling (lower-is-better
+# metrics only) enforced on the latest entry regardless of history depth
+METRICS: Tuple[Tuple, ...] = (
     ("fleet", "speedup", +1),
     ("fleet", "lookahead_overhead_ratio", -1),
     ("engine_scale", "scale_speedup", +1),
+    ("obs", "overhead_ratio", -1, 1.03),
+    ("obs", "null_overhead_ratio", -1, 1.005),
 )
 
 
@@ -46,12 +58,23 @@ def section_metric(entry: dict, section: str, key: str) -> Optional[float]:
 
 def check(trajectory: List[dict], threshold: float) -> List[str]:
     """Regression messages for the latest entry ([] = gate passes)."""
-    if len(trajectory) < 3:
-        return []  # one prior entry is not a trend — don't gate on noise
+    if not trajectory:
+        return []
     latest = trajectory[-1]
-    priors = [e for e in trajectory[:-1] if e.get("quick") == latest.get("quick")]
     problems = []
-    for section, key, direction in METRICS:
+    # absolute ceilings first: design budgets bind without any history
+    for spec in METRICS:
+        ceiling = spec[3] if len(spec) > 3 else None
+        current = section_metric(latest, spec[0], spec[1])
+        if ceiling is not None and current is not None and current > ceiling:
+            problems.append(
+                f"{spec[0]}.{spec[1]} exceeds its absolute budget: latest "
+                f"{current:.4f} > ceiling {ceiling}"
+            )
+    if len(trajectory) < 3:
+        return problems  # one prior entry is not a trend — don't gate on noise
+    priors = [e for e in trajectory[:-1] if e.get("quick") == latest.get("quick")]
+    for section, key, direction in (spec[:3] for spec in METRICS):
         current = section_metric(latest, section, key)
         history = [
             m

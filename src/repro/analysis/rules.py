@@ -1,4 +1,4 @@
-"""The seven enforced contracts, as AST checks.
+"""The eight enforced contracts, as AST checks.
 
 Each rule pins one documented invariant whose violation was (or would
 be) the root cause of a shipped bug or a perf cliff:
@@ -22,6 +22,9 @@ be) the root cause of a shipped bug or a perf cliff:
 * ``unit-suffix``        — physical quantities carry ``_j``/``_s``/
   ``_ghz``/``_w`` suffixes, and +,-,comparison never mix suffixes
   (× and ÷ legitimately change dimension: J = W·s).
+* ``no-bare-print``      — library code emits diagnostics through
+  ``repro.obs.log`` (stdout plus the flight recorder), never bare
+  ``print()``; ``__main__.py`` CLI drivers are exempt.
 
 Heuristics are deliberately syntactic — this is a contract linter, not a
 type system. Anything it cannot see (aliasing, dynamic dispatch) is out
@@ -719,3 +722,44 @@ def check_unit_suffix(
                     )
                     if f:
                         yield f
+
+
+# ---------------------------------------------------------------------------
+# 8 · no-bare-print
+# ---------------------------------------------------------------------------
+
+
+def _scope_library(parts: Sequence[str]) -> bool:
+    """Library code under src/repro — ``__main__.py`` CLI drivers are
+    exempt (their stdout IS the interface), as is ``repro/obs`` itself
+    (``obs/log.py`` hosts the one sanctioned ``print``)."""
+    if "repro" not in parts:
+        return False
+    if parts[-1] == "__main__.py":
+        return False
+    return "obs" not in parts
+
+
+@register(
+    "no-bare-print",
+    "bare print() in library code",
+    "library diagnostics route through repro.obs.log (stdout AND the "
+    "flight recorder); __main__.py CLI drivers are exempt",
+    _scope_library,
+)
+def check_no_bare_print(
+    tree: ast.Module, src: str, path: str
+) -> Iterable[Finding]:
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "print"
+        ):
+            yield _find(
+                "no-bare-print",
+                path,
+                node,
+                "bare print() in library code — route diagnostics through "
+                "repro.obs.log so recorded runs keep their console story",
+            )

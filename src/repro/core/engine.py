@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import svr as svr_mod
 from repro.core.power import PowerModel
 from repro.kernels import ops as kernel_ops
@@ -244,6 +245,22 @@ _GRID_CALLABLE_CACHE: Dict[Tuple, object] = {}
 TRACE_COUNTS: Dict[str, int] = {"objective": 0, "plan_argmin": 0, "pareto": 0}
 
 
+def _count_callable_lookup(fn: object) -> None:
+    """Flight-recorder hook: every memo lookup is a hit or a miss (a miss
+    is about to pay a jit trace). No-op singletons when not recording."""
+    if fn is None:
+        obs.counter("engine.grid_callable_cache.miss").inc()
+    else:
+        obs.counter("engine.grid_callable_cache.hit").inc()
+
+
+def _export_trace_counts() -> None:
+    """Mirror ``TRACE_COUNTS`` into the registry (gauges: the counts are
+    process-cumulative, so last-write-wins is the right semantics)."""
+    for name, n in TRACE_COUNTS.items():
+        obs.gauge(f"engine.trace_counts.{name}").set(n)
+
+
 def _objective_callable(shape: Tuple[int, int, int]):
     """The (workload × frequency × cores) metric tensor in one jitted pass.
 
@@ -253,6 +270,7 @@ def _objective_callable(shape: Tuple[int, int, int]):
     """
     key = ("objective", shape)
     fn = _GRID_CALLABLE_CACHE.get(key)
+    _count_callable_lookup(fn)
     if fn is None:
 
         @jax.jit
@@ -274,6 +292,7 @@ def _plan_argmin_callable(shape: Tuple[int, int, int], impl: str):
     with T2/mask2 flattened to (B, nf·nc) C-order."""
     key = ("plan_argmin", shape, impl)
     fn = _GRID_CALLABLE_CACHE.get(key)
+    _count_callable_lookup(fn)
     if fn is None:
 
         @jax.jit
@@ -295,6 +314,7 @@ def _pareto_callable(shape: Tuple[int, int, int], impl: str):
     read from it match the unfused path."""
     key = ("pareto", shape, impl)
     fn = _GRID_CALLABLE_CACHE.get(key)
+    _count_callable_lookup(fn)
     if fn is None:
 
         @jax.jit
@@ -656,18 +676,26 @@ class PlanningEngine:
         for key, w in zip(keys, workloads):
             if key not in self._fits and key not in missing:
                 missing[key] = self._terms_for(w)
+        if obs.enabled():
+            obs.counter("engine.fit_cache.miss").inc(len(missing))
+            obs.counter("engine.fit_cache.hit").inc(
+                len(set(keys)) - len(missing)
+            )
         if missing:
             sets = [self._training_set(t) for t in missing.values()]
             # method="auto": the engine's sweep sets are far below the RFF
             # threshold so this stays on the exact dual solve; large
             # installed telemetry windows (install_fit refits) go linear
-            models = svr_mod.fit_many(
-                sets,
-                method="auto",
-                rff_threshold=self.rff_threshold,
-                **ENGINE_FIT_KW,
-            )
-            preds = svr_mod.predict_each(models, [x for x, _ in sets])
+            with obs.span(
+                "engine.fit_many", cat="engine", n_families=len(missing)
+            ):
+                models = svr_mod.fit_many(
+                    sets,
+                    method="auto",
+                    rff_threshold=self.rff_threshold,
+                    **ENGINE_FIT_KW,
+                )
+                preds = svr_mod.predict_each(models, [x for x, _ in sets])
             for (key, terms), model, (x, y), pred in zip(
                 missing.items(), models, sets, preds
             ):
@@ -774,15 +802,33 @@ class PlanningEngine:
 
         Example::
 
+            from repro import obs
             from repro.core.engine import PlanningEngine, Workload
             eng = PlanningEngine.default()
             plans = eng.plan_many(
                 [Workload(arch="example_lm", terms=my_terms)])
-            print(plans[0].summary())
+            obs.log(plans[0].summary())
         """
         workloads = list(workloads)
         if not workloads:
             return []
+        use_fused = bool(self.fused if fused is None else fused)
+        obs.histogram("engine.plan_many.batch_size").observe(len(workloads))
+        obs.counter(
+            "engine.plan_many.fused" if use_fused else "engine.plan_many.exact"
+        ).inc()
+        with obs.span(
+            "engine.plan_many", cat="engine",
+            batch=len(workloads), fused=use_fused,
+        ):
+            plans = self._plan_many_impl(workloads, use_fused)
+        if obs.enabled():
+            _export_trace_counts()
+        return plans
+
+    def _plan_many_impl(
+        self, workloads: List[Workload], use_fused: bool
+    ) -> List[EnergyPlan]:
         objectives = [w.objective or self.objective for w in workloads]
         for obj in objectives:
             if obj not in OBJECTIVES:
@@ -796,7 +842,7 @@ class PlanningEngine:
         T_stack = jnp.asarray(T64, jnp.float32)
         W32 = jnp.asarray(self._W, jnp.float32)
         k_np = np.asarray([OBJECTIVES[obj] for obj in objectives], np.float32)
-        if not (self.fused if fused is None else fused):
+        if not use_fused:
             # exact arm: one objective tensor, one host argmin per workload
             metric = np.asarray(
                 _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
@@ -821,6 +867,9 @@ class PlanningEngine:
             # empty mask: rare — route through solve_grid's on_infeasible
             # semantics with the exact arm's metric slice, then patch the
             # chosen flat index so the finish pass below stays unified
+            obs.counter("engine.plan_many.infeasible_patched").inc(
+                int((~feasible).sum())
+            )
             metric = np.asarray(
                 _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
                 np.float64,
@@ -1002,13 +1051,31 @@ class PlanningEngine:
         workloads = list(workloads)
         if not workloads:
             return []
+        use_fused = bool(self.fused if fused is None else fused)
+        obs.histogram("engine.pareto_many.batch_size").observe(len(workloads))
+        obs.counter(
+            "engine.pareto_many.fused" if use_fused
+            else "engine.pareto_many.exact"
+        ).inc()
+        with obs.span(
+            "engine.pareto_many", cat="engine",
+            batch=len(workloads), fused=use_fused,
+        ):
+            frontiers = self._pareto_many_impl(workloads, use_fused)
+        if obs.enabled():
+            _export_trace_counts()
+        return frontiers
+
+    def _pareto_many_impl(
+        self, workloads: List[Workload], use_fused: bool
+    ) -> List[List[ParetoPoint]]:
         fits = self._fits_for(workloads)
         self._ensure_predictions(fits)
         T64 = self._t_stack(fits)  # (B, nf, nc) float64
         b, nf, nc = T64.shape
         T_stack = jnp.asarray(T64, jnp.float32)
         W32 = jnp.asarray(self._W, jnp.float32)
-        if not (self.fused if fused is None else fused):
+        if not use_fused:
             # E·T^0, i.e. the plain energy tensor. np.zeros, not jnp.zeros:
             # the device zeros kernel would jit-compile once per batch
             # size, turning the first frontier round of every new batch
@@ -1023,6 +1090,10 @@ class PlanningEngine:
             ]
         mask = self._mask_stack(workloads, T64)
         feasible = mask.any(axis=(1, 2))
+        if not feasible.all():
+            obs.counter("engine.pareto_many.infeasible_fallback").inc(
+                int((~feasible).sum())
+            )
         sweep = _pareto_callable((b, nf, nc), kernel_ops.resolve_impl(None))
         E2, kept = sweep(
             T_stack.reshape(b, nf * nc),

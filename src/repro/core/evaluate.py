@@ -29,6 +29,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import energy, power
 from repro.core.characterize import CharacterizationSet
 from repro.core.governor import (
@@ -304,7 +305,7 @@ def main(argv: Optional[Sequence[str]] = None) -> ComparisonReport:
     else:
         kw.update(repeats=args.repeats or 3)
     report = compare_governors(node, **kw)
-    print(report.table())
+    obs.log(report.table())
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report.to_json(), f, indent=1)

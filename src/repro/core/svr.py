@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import rff as rff_mod
 from repro.kernels import ops
 
@@ -477,11 +478,17 @@ def fit_many(
                 seed=rff_seed,
                 ridge=rff_ridge,
             )
+            # flight-recorder route accounting: the RFF side is counted
+            # here at the dispatch; the exact side is counted once, at the
+            # plain solve below (the mixed branch RECURSES into fit_many
+            # for its exact half, so counting it here would double-count)
             if all(use_rff):
+                obs.counter("svr.fit_route_rff").inc(len(pairs))
                 return rff_mod.fit_many_rff(pairs, **rff_kw)
             # mixed batch: split by route, fit each side its own way,
             # merge back into input order
             rff_idx = [i for i, u in enumerate(use_rff) if u]
+            obs.counter("svr.fit_route_rff").inc(len(rff_idx))
             exact_idx = [i for i, u in enumerate(use_rff) if not u]
             merged: list = [None] * len(pairs)
             for i, m in zip(
@@ -502,6 +509,8 @@ def fit_many(
             for i, m in zip(exact_idx, exact_models):
                 merged[i] = m
             return merged
+
+    obs.counter("svr.fit_route_exact").inc(len(pairs))
 
     # preprocessing stays in numpy: per-item jnp dispatches here would eat
     # the batching win before the solver even runs. Same-shape batches (the
@@ -562,17 +571,18 @@ def fit_many(
             mask[i, : ns[i]] = True
 
     # the compute hotspot: every training set's Gram block in ONE call
-    K = _gram_batched(jnp.asarray(Xp), jnp.asarray(Xp), gamma, impl)
-    ragged = not mask.all()
-    K64 = np.asarray(K, np.float64)
-    if ragged:  # zero the padded Gram rows/cols (pad features are not real)
-        K64 *= mask[:, :, None] & mask[:, None, :]
-    C_s = np.asarray([m[5] for m in metas], np.float64)
-    eps_s = np.asarray([m[4] for m in metas], np.float64)
+    with obs.span("svr.fit_exact", cat="svr", batch=B, n_max=n_max):
+        K = _gram_batched(jnp.asarray(Xp), jnp.asarray(Xp), gamma, impl)
+        ragged = not mask.all()
+        K64 = np.asarray(K, np.float64)
+        if ragged:  # zero the padded Gram rows/cols (pads are not real)
+            K64 *= mask[:, :, None] & mask[:, None, :]
+        C_s = np.asarray([m[5] for m in metas], np.float64)
+        eps_s = np.asarray([m[4] for m in metas], np.float64)
 
-    beta, bias = _solve_dual_ladder(
-        K64, np.asarray(Yp, np.float64), C_s, eps_s, mask, ridge
-    )
+        beta, bias = _solve_dual_ladder(
+            K64, np.asarray(Yp, np.float64), C_s, eps_s, mask, ridge
+        )
 
     if iters > 0:
         K32 = jnp.asarray(K)

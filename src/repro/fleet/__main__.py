@@ -25,11 +25,13 @@ engine vs engine-fallback.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.characterize import workloads_from_artifacts
 from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
 from repro.fleet.cluster import TermsFamily, make_pool
@@ -239,6 +241,14 @@ def main(argv: Optional[Sequence[str]] = None):
         default=2_000.0,
         help="joules charged per preemptive migration",
     )
+    ap.add_argument(
+        "--trace",
+        metavar="FILE",
+        help="record the run with the flight recorder (repro.obs) and "
+        "write a Perfetto-loadable trace + metrics rollup + per-node "
+        "timeline to FILE; scheduling results stay bitwise-identical "
+        "to an untraced run (summarize with `python -m repro.obs FILE`)",
+    )
     args = ap.parse_args(argv)
 
     n_jobs = args.jobs or (12 if args.quick else 32)
@@ -266,69 +276,88 @@ def main(argv: Optional[Sequence[str]] = None):
         LookaheadPolicy(horizon_s=args.horizon) if args.horizon > 0 else None
     )
 
-    if args.artifacts:
-        jobs = build_artifact_jobs(args.artifacts, seed=args.seed)
-        if not jobs:
-            ap.error(f"no usable dry-run artifacts under {args.artifacts!r}")
-        # drift the first artifact family mid-trace: the intake loop must
-        # exercise re-characterization and (policy permitting) migration
-        drift_app = jobs[0].app
-        drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
-        drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
-        report, sched = run_artifact_fleet(
-            jobs,
-            n_nodes=args.nodes,
-            seed=args.seed,
-            engine_kw=engine_kw,
-            char_freqs=char_freqs,
-            char_cores=char_cores,
-            drift_events=drift_events,
-            migration=migration,
-            negotiate=negotiate,
-            lookahead=lookahead,
-        )
-    else:
-        jobs = build_jobs(
-            n_jobs, seed=args.seed, input_sizes=input_sizes, burst=args.burst
-        )
-        drift_app = DRIFT_APP
-        # the drift event lands mid-trace: enough history before it to
-        # trust the model, enough jobs after it to notice and profit from
-        # the re-fit
-        drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
-        drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
-        report, sched = run_fleet_comparison(
-            jobs,
-            n_nodes=args.nodes,
-            seed=args.seed,
-            drift_events=drift_events,
-            engine_kw=engine_kw,
-            char_freqs=char_freqs,
-            char_cores=char_cores,
-            negotiate=negotiate,
-            migration=migration,
-            lookahead=lookahead,
-            include_fallback=not args.fallback,
-            include_myopic=lookahead is not None,
-        )
+    # --trace installs the flight recorder for the whole comparison run;
+    # without it the nulls stay in place and the run is untraced/unchanged
+    rec_ctx = (
+        obs.recording() if args.trace else contextlib.nullcontext()
+    )
+    with rec_ctx as rec:
+        if args.artifacts:
+            jobs = build_artifact_jobs(args.artifacts, seed=args.seed)
+            if not jobs:
+                ap.error(
+                    f"no usable dry-run artifacts under {args.artifacts!r}"
+                )
+            # drift the first artifact family mid-trace: the intake loop
+            # must exercise re-characterization and (policy permitting)
+            # migration
+            drift_app = jobs[0].app
+            drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+            drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
+            report, sched = run_artifact_fleet(
+                jobs,
+                n_nodes=args.nodes,
+                seed=args.seed,
+                engine_kw=engine_kw,
+                char_freqs=char_freqs,
+                char_cores=char_cores,
+                drift_events=drift_events,
+                migration=migration,
+                negotiate=negotiate,
+                lookahead=lookahead,
+            )
+        else:
+            jobs = build_jobs(
+                n_jobs,
+                seed=args.seed,
+                input_sizes=input_sizes,
+                burst=args.burst,
+            )
+            drift_app = DRIFT_APP
+            # the drift event lands mid-trace: enough history before it to
+            # trust the model, enough jobs after it to notice and profit
+            # from the re-fit
+            drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+            drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
+            report, sched = run_fleet_comparison(
+                jobs,
+                n_nodes=args.nodes,
+                seed=args.seed,
+                drift_events=drift_events,
+                engine_kw=engine_kw,
+                char_freqs=char_freqs,
+                char_cores=char_cores,
+                negotiate=negotiate,
+                migration=migration,
+                lookahead=lookahead,
+                include_fallback=not args.fallback,
+                include_myopic=lookahead is not None,
+            )
 
-    n_rounds = len(sched.rounds)
-    n_planned = sum(r.planned for r in sched.rounds)
-    mode = "fallback" if args.fallback else "negotiate+migrate"
-    if lookahead is not None:
-        mode += f"+lookahead({args.horizon:.0f}s)"
-    print(
-        f"fleet: {args.nodes} nodes, {len(jobs)} jobs, {n_rounds} rounds "
-        f"({n_planned} with planning, {mode}), drift {drift_app}"
-        f"x{DRIFT_FACTOR} @t={drift_t:.0f}s"
-    )
-    print(report.table())
-    ok = report.engine_beats_all(tol=0.05)
-    refits = report.engine.recharacterizations
-    print(
-        f"engine <= every baseline fleet (tol 5%): {ok}; "
-        f"drift-triggered re-characterizations: {refits}"
-    )
+        n_rounds = len(sched.rounds)
+        n_planned = sum(r.planned for r in sched.rounds)
+        mode = "fallback" if args.fallback else "negotiate+migrate"
+        if lookahead is not None:
+            mode += f"+lookahead({args.horizon:.0f}s)"
+        obs.log(
+            f"fleet: {args.nodes} nodes, {len(jobs)} jobs, {n_rounds} rounds "
+            f"({n_planned} with planning, {mode}), drift {drift_app}"
+            f"x{DRIFT_FACTOR} @t={drift_t:.0f}s"
+        )
+        obs.log(report.table())
+        ok = report.engine_beats_all(tol=0.05)
+        refits = report.engine.recharacterizations
+        obs.log(
+            f"engine <= every baseline fleet (tol 5%): {ok}; "
+            f"drift-triggered re-characterizations: {refits}"
+        )
+    if args.trace:
+        payload = obs.write_trace(args.trace, rec, sched=sched)
+        obs.log(
+            f"flight recorder: {len(payload['traceEvents'])} trace events, "
+            f"{payload['meta']['n_timeline_segments']} timeline segments "
+            f"-> {args.trace} (summarize: python -m repro.obs {args.trace})"
+        )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report.to_json(), f, indent=1, default=float)

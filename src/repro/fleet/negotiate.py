@@ -76,6 +76,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.fleet.cluster import CapacityProfile, NodePool, time_eps
 
 
@@ -762,8 +763,9 @@ class Negotiator:
         for a in assign:
             if a is not None:
                 self._occupy(work, a)
-        n_moves = n_exchanges = 0
+        n_moves = n_exchanges = n_iters = 0
         while search and n_moves + n_exchanges < self.max_moves:
+            n_iters += 1
             single = self._try_single_moves_slotted(jobs, options, assign, work)
             if single is not None:
                 i, o = single
@@ -802,6 +804,9 @@ class Negotiator:
             raise RuntimeError(
                 "slot negotiation oversubscribed a capacity window"
             )
+        obs.counter("fleet.negotiate.search_iterations").inc(n_iters)
+        obs.counter("fleet.negotiate.moves_accepted").inc(n_moves)
+        obs.counter("fleet.negotiate.exchanges_accepted").inc(n_exchanges)
         return NegotiationResult(
             assignments=assign, seed=seed, n_moves=n_moves, n_exchanges=n_exchanges
         )
@@ -867,8 +872,9 @@ class Negotiator:
         seed = self._seed(jobs, options, frontiers, free_cores, slacks)
         assign = list(seed)
         remaining = self._remaining(assign, free_cores)
-        n_moves = n_exchanges = 0
+        n_moves = n_exchanges = n_iters = 0
         while search and n_moves + n_exchanges < self.max_moves:
+            n_iters += 1
             single = self._try_single_moves(jobs, options, assign, remaining)
             if single is not None:
                 i, o = single
@@ -897,6 +903,9 @@ class Negotiator:
         # same hard invariant as the slotted path: must survive python -O
         if min(self._remaining(assign, free_cores), default=0) < 0:
             raise RuntimeError("negotiation oversubscribed a node's cores")
+        obs.counter("fleet.negotiate.search_iterations").inc(n_iters)
+        obs.counter("fleet.negotiate.moves_accepted").inc(n_moves)
+        obs.counter("fleet.negotiate.exchanges_accepted").inc(n_exchanges)
         return NegotiationResult(
             assignments=assign, seed=seed, n_moves=n_moves, n_exchanges=n_exchanges
         )

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
+from repro.obs import metrics as obs_metrics
 from repro.core.evaluate import (
     STOCK_GOVERNORS,
     ComparisonReport,
@@ -67,6 +69,13 @@ class ScenarioStats:
     # horizon and how many tentative capacity holds its rounds placed
     lookahead_horizon_s: float = 0.0
     tentative_reservations: int = 0
+    # flight-recorder rollup ({} unless the run was recorded): the
+    # registry DELTA attributable to this scenario (counters/gauges/
+    # histograms — see repro.obs.metrics.diff). Purely observational:
+    # it is the ONE field allowed to differ between a traced and an
+    # untraced run of the same scenario, which the bitwise-parity test
+    # asserts by stripping it before comparing.
+    obs_rollup: Dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -195,7 +204,15 @@ def run_engine_fleet(
         migration=migration,
         lookahead=lookahead,
     )
+    # snapshot the registry around the run so the rollup is THIS
+    # scenario's delta, not the whole process history (several scenarios
+    # share one recording in a comparison run)
+    reg = obs.metrics_registry()
+    before = reg.snapshot() if reg.enabled else None
     completed = sched.run(jobs, drift_events=drift_events)
+    rollup = (
+        obs_metrics.diff(before, reg.snapshot()) if reg.enabled else {}
+    )
     stats = ScenarioStats(
         name=name,
         total_energy_j=sched.total_energy_j(),
@@ -218,6 +235,7 @@ def run_engine_fleet(
         negotiation_exchanges=sum(r.n_exchanges for r in sched.rounds),
         lookahead_horizon_s=lookahead.horizon_s if lookahead else 0.0,
         tentative_reservations=sched.telemetry.n_tentative_reservations,
+        obs_rollup=rollup,
     )
     return stats, sched
 

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import svr as svr_mod
 from repro.core.engine import (
     ENGINE_FIT_KW,
@@ -420,14 +421,35 @@ class FleetScheduler:
         Returns the round's ``RoundLog`` (also appended to ``rounds``).
         Energies throughout are joules, times seconds, frequencies GHz.
         """
+        with obs.span("fleet.round", cat="fleet", sim_t_s=now):
+            log = self._step_impl(now)
+        if obs.enabled():
+            self._export_round_metrics(log, now)
+        return log
+
+    def _export_round_metrics(self, log: RoundLog, now: float) -> None:
+        """Flight-recorder rollup for one round (recording runs only —
+        ``step`` gates on ``obs.enabled()``)."""
+        reg = obs.metrics_registry()
+        reg.counter("fleet.rounds").inc()
+        reg.counter("fleet.jobs_placed").inc(log.n_placed)
+        reg.counter("fleet.migrations").inc(log.n_migrated)
+        reg.counter("fleet.tentative_holds").inc(log.n_tentative)
+        reg.counter("fleet.future_planned").inc(log.n_future)
+        reg.histogram("fleet.round.pending_jobs").observe(log.n_pending)
+        self.telemetry.export_staleness_gauges(reg, now)
+
+    def _step_impl(self, now: float) -> RoundLog:
         self._ingest(now)
         eps = time_eps(now)
         if self.lookahead is not None:
             # last round's holds are provisional by contract: release and
             # re-plan them with this round's fresh capacity + telemetry
             self.pool.release_tentative()
-        refit = self._refresh_stale(now)
-        n_migrated = self._maybe_migrate(now, refit)
+        with obs.span("fleet.refresh", cat="fleet", sim_t_s=now):
+            refit = self._refresh_stale(now)
+        with obs.span("fleet.migrate", cat="fleet", sim_t_s=now):
+            n_migrated = self._maybe_migrate(now, refit)
         pending_now = [j for j in self._pending if j.arrival_s <= now + eps]
         future: List[Job] = []
         if self.lookahead is not None:
@@ -450,29 +472,38 @@ class FleetScheduler:
             n_future=len(future) if planned else 0,
         )
         if log.planned:
-            if self.lookahead is not None:
-                self._place_lookahead(pending_now, future, now, log)
-            else:
-                workloads = [self._workload(j, now, cap) for j in pending_now]
-                if self.negotiator is not None:
-                    self._place_negotiated(pending_now, workloads, now, log)
+            with obs.span(
+                "fleet.place", cat="fleet", sim_t_s=now,
+                n_ready=len(pending_now), n_future=len(future),
+            ):
+                if self.lookahead is not None:
+                    self._place_lookahead(pending_now, future, now, log)
                 else:
-                    plans = self.engine.plan_many(workloads)  # THE one batched call
-                    order = sorted(
-                        range(len(pending_now)),
-                        key=lambda i: (
-                            pending_now[i].deadline_s,
-                            pending_now[i].job_id,
-                        ),
-                    )
-                    for i in order:
-                        placement = self._place(
-                            pending_now[i], workloads[i], plans[i], now
+                    workloads = [
+                        self._workload(j, now, cap) for j in pending_now
+                    ]
+                    if self.negotiator is not None:
+                        self._place_negotiated(
+                            pending_now, workloads, now, log
                         )
-                        if placement is not None:
-                            self._launch(placement)
-                            self._pending.remove(pending_now[i])
-                            log.n_placed += 1
+                    else:
+                        # THE one batched call
+                        plans = self.engine.plan_many(workloads)
+                        order = sorted(
+                            range(len(pending_now)),
+                            key=lambda i: (
+                                pending_now[i].deadline_s,
+                                pending_now[i].job_id,
+                            ),
+                        )
+                        for i in order:
+                            placement = self._place(
+                                pending_now[i], workloads[i], plans[i], now
+                            )
+                            if placement is not None:
+                                self._launch(placement)
+                                self._pending.remove(pending_now[i])
+                                log.n_placed += 1
         self.rounds.append(log)
         return log
 
@@ -522,17 +553,21 @@ class FleetScheduler:
         profiles = [
             n.capacity_profile(include_tentative=False) for n in self.pool
         ]
-        result = self._slot_negotiator.negotiate(
-            jobs,
-            [w.terms for w in workloads],
-            frontiers,
-            (),  # scalar free-core counts: unused in slot mode
-            [j.deadline_s - now for j in jobs],
-            now=now,
-            arrivals=[j.arrival_s for j in jobs],
-            profiles=profiles,
-            search=self.negotiator is not None,
-        )
+        with obs.span(
+            "fleet.negotiate", cat="fleet", sim_t_s=now,
+            slotted=True, n_jobs=len(jobs),
+        ):
+            result = self._slot_negotiator.negotiate(
+                jobs,
+                [w.terms for w in workloads],
+                frontiers,
+                (),  # scalar free-core counts: unused in slot mode
+                [j.deadline_s - now for j in jobs],
+                now=now,
+                arrivals=[j.arrival_s for j in jobs],
+                profiles=profiles,
+                search=self.negotiator is not None,
+            )
         log.n_moves = result.n_moves
         log.n_exchanges = result.n_exchanges
         eps = time_eps(now)
@@ -592,9 +627,13 @@ class FleetScheduler:
         terms_list = [w.terms for w in workloads]
         free = [n.free_cores(now) for n in self.pool]
         slacks = [j.deadline_s - now for j in pending_now]
-        result = self.negotiator.negotiate(
-            pending_now, terms_list, frontiers, free, slacks
-        )
+        with obs.span(
+            "fleet.negotiate", cat="fleet", sim_t_s=now,
+            slotted=False, n_jobs=len(pending_now),
+        ):
+            result = self.negotiator.negotiate(
+                pending_now, terms_list, frontiers, free, slacks
+            )
         log.n_moves = result.n_moves
         log.n_exchanges = result.n_exchanges
         for i, opt in enumerate(result.assignments):
@@ -837,6 +876,11 @@ class FleetScheduler:
         self._refit_ratio = {}
         if not stale:
             return []
+        obs.counter("fleet.drift_detections").inc(len(stale))
+        obs.event(
+            "fleet.drift", cat="fleet", sim_t_s=now,
+            families=[f"{app}:{size:g}" for app, size in stale],
+        )
         keys = [
             self._family_keys.get(fam, family_key(*fam)) for fam in stale
         ]
@@ -861,6 +905,7 @@ class FleetScheduler:
                 key, model, svr_mod.pae_from_pred(pred, y), terms
             )
             self.telemetry.mark_refreshed(fam, now)
+        obs.counter("fleet.refits").inc(len(stale))
         return stale
 
     # -- preemptive rebalancing after a material re-fit ---------------------
@@ -1032,7 +1077,14 @@ class FleetScheduler:
                 burned_j=burned,
                 migration_cost_j=pol.cost_j,
                 projected_saving_j=saving_j,
+                start_s=c.placement.start_s,
+                cores=c.placement.cores,
             )
+        )
+        obs.event(
+            "fleet.preempt", cat="fleet", sim_t_s=now,
+            job_id=job.job_id, from_node=old_node.name, to_node=node.name,
+            burned_j=burned, projected_saving_j=saving_j,
         )
         placement = Placement(
             job=job,

@@ -85,6 +85,11 @@ class PreemptionRecord:
     burned_j: float  # measured joules spent on the abandoned segment
     migration_cost_j: float  # checkpoint/transfer/restart charge
     projected_saving_j: float  # believed net saving that cleared the bar
+    # abandoned-segment geometry (defaults keep old call sites valid):
+    # where the segment started and how wide it was, so the flight
+    # recorder's timeline can draw the thrown-away work, not just count it
+    start_s: float = 0.0
+    cores: int = 0
 
 
 class DriftDetector:
@@ -119,6 +124,15 @@ class DriftDetector:
             and sum(errs) / len(errs) > self.threshold
         )
 
+    def occupancy(self, family: Family) -> float:
+        """Window fill fraction in [0, 1]: how much evidence the watchdog
+        actually holds for this family. The drift threshold can only trip
+        once ``min_samples`` arrive — a family at low occupancy is not
+        "healthy", it is *unwatched*, which is what the flight recorder's
+        staleness gauges make visible."""
+        errs = self._errors.get(family)
+        return len(errs) / self.window if errs else 0.0
+
     def reset(self, family: Family) -> None:
         self._errors.pop(family, None)
 
@@ -136,10 +150,17 @@ class TelemetryHub:
         self.refreshes: List[Tuple[float, Family]] = []  # (sim time, family)
         self.preemptions: List[PreemptionRecord] = []
         self.tentatives: List[TentativeRecord] = []
+        # last observation sim-time per family: the drift detector can
+        # only see families that keep reporting — this is the side channel
+        # that catches the ones that went quiet (see ``silent_families``)
+        self._last_obs_s: Dict[Family, float] = {}
 
     def record(self, obs: Observation) -> None:
         self.observations.append(obs)
         self.detector.record(obs.family, obs.rel_time_error)
+        prev = self._last_obs_s.get(obs.family, float("-inf"))
+        if obs.finish_s > prev:
+            self._last_obs_s[obs.family] = obs.finish_s
 
     def record_preemption(self, rec: PreemptionRecord) -> None:
         """Log one preemptive migration (the scheduler's rebalancing pass)."""
@@ -160,6 +181,50 @@ class TelemetryHub:
         """Sim time of the family's most recent refresh (-inf if never)."""
         times = [t for t, fam in self.refreshes if fam == family]
         return max(times) if times else float("-inf")
+
+    # -- staleness visibility (the silent-family gap) --------------------
+    #
+    # Drift detection is *reactive*: a family that keeps completing jobs
+    # with bad predictions trips the threshold, but a family that simply
+    # STOPS reporting (starved, stuck behind holds, node loss) never
+    # feeds the detector and quietly never refits. These views surface
+    # that second failure mode as data instead of silence.
+
+    def families(self) -> List[Family]:
+        """Every family ever observed, deterministically sorted."""
+        return sorted(self._last_obs_s)
+
+    def last_observation_s(self, family: Family) -> float:
+        """Sim time of the family's newest observation (-inf if never)."""
+        return self._last_obs_s.get(family, float("-inf"))
+
+    def observation_age_s(self, family: Family, now: float) -> float:
+        """Seconds of sim time since the family last reported (inf if it
+        never has)."""
+        return now - self._last_obs_s.get(family, float("-inf"))
+
+    def silent_families(self, now: float, max_age_s: float) -> List[Family]:
+        """Observed families whose newest observation is older than
+        ``max_age_s`` — the ones the drift watchdog cannot see anymore."""
+        return sorted(
+            fam
+            for fam, last_s in self._last_obs_s.items()
+            if now - last_s > max_age_s
+        )
+
+    def export_staleness_gauges(self, registry, now: float) -> None:
+        """Publish per-family window occupancy and observation age into a
+        metrics registry (``repro.obs``-compatible: any object exposing
+        ``gauge(name).set(value)``)."""
+        for fam in self.families():
+            app, size = fam
+            suffix = f"{app}:{size:g}"
+            registry.gauge(
+                f"telemetry.window_occupancy.{suffix}"
+            ).set(self.detector.occupancy(fam))
+            registry.gauge(
+                f"telemetry.observation_age_s.{suffix}"
+            ).set(self.observation_age_s(fam, now))
 
     def family_observations(
         self, family: Family, *, since_s: float = float("-inf")

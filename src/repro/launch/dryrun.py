@@ -34,6 +34,7 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import obs  # noqa: E402
 from repro.configs import ARCHS, get_arch  # noqa: E402
 from repro.configs.base import SHAPES  # noqa: E402
 from repro.launch import hlo_analysis, steps  # noqa: E402
@@ -226,7 +227,7 @@ def main():
         if args.skip_existing and os.path.exists(path):
             with open(path) as f:
                 if json.load(f).get("ok"):
-                    print(f"SKIP {arch_id} {shape_name} {mesh_name} (cached)")
+                    obs.log(f"SKIP {arch_id} {shape_name} {mesh_name} (cached)")
                     n_ok += 1
                     continue
         t0 = time.time()
@@ -239,12 +240,12 @@ def main():
             if rec.get("ok")
             else rec.get("error", "")[:120]
         )
-        print(
+        obs.log(
             f"{status} {arch_id:24s} {shape_name:12s} {mesh_name:8s} "
             f"t={time.time()-t0:6.1f}s {extra}",
             flush=True,
         )
-    print(f"done: {n_ok}/{len(todo)} cells ok")
+    obs.log(f"done: {n_ok}/{len(todo)} cells ok")
 
 
 if __name__ == "__main__":

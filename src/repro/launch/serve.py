@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHS
 from repro.configs.example_lm import ARCH_100M, EXAMPLES
 from repro.launch import steps as steps_mod
@@ -85,11 +86,11 @@ def main(argv=None):
 
     out = jnp.concatenate(generated, axis=1)
     tps = (args.gen * args.batch) / max(t_decode, 1e-9)
-    print(f"arch={cfg.name} batch={args.batch}")
-    print(f"prefill: {t_prefill*1e3:.0f} ms for {args.batch}x{args.prompt_len} tokens")
-    print(f"decode:  {args.gen} steps in {t_decode*1e3:.0f} ms -> {tps:.1f} tok/s")
-    print(f"swapped-in queued prompts: {done_count}")
-    print("sample tokens:", np.asarray(out[0])[:12].tolist())
+    obs.log(f"arch={cfg.name} batch={args.batch}")
+    obs.log(f"prefill: {t_prefill*1e3:.0f} ms for {args.batch}x{args.prompt_len} tokens")
+    obs.log(f"decode:  {args.gen} steps in {t_decode*1e3:.0f} ms -> {tps:.1f} tok/s")
+    obs.log(f"swapped-in queued prompts: {done_count}")
+    obs.log(f"sample tokens: {np.asarray(out[0])[:12].tolist()}")
     return np.asarray(out)
 
 

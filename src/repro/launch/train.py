@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHS
 from repro.configs.base import ArchDef, ShapeCell
 from repro.configs.example_lm import EXAMPLES, ARCH_100M
@@ -131,12 +132,12 @@ def main(argv=None):
             arch_id=args.arch,
             cell=ShapeCell("train", args.seq, args.batch, "train"),
         )
-        print(f"[auto-energy] {plan.summary()}")
+        obs.log(f"[auto-energy] {plan.summary()}")
 
     params = arch.init(jax.random.PRNGKey(args.seed), cfg)
     opt_state = adamw.init(params)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"arch={cfg.name} params={n_params:,}")
+    obs.log(f"arch={cfg.name} params={n_params:,}")
 
     if args.compress:
         if not args.mesh:
@@ -163,7 +164,7 @@ def main(argv=None):
 
     def on_metrics(step, m):
         if step % args.log_every == 0 or step == 1:
-            print(
+            obs.log(
                 f"step {step:5d} loss {float(m['loss']):.4f} "
                 f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f} "
                 f"({m['step_time_s']*1e3:.0f} ms)",
@@ -180,9 +181,9 @@ def main(argv=None):
         on_metrics=on_metrics,
     )
     if trainer.try_restore():
-        print(f"resumed from step {trainer.step}")
+        obs.log(f"resumed from step {trainer.step}")
     result = trainer.run(args.steps)
-    print(
+    obs.log(
         f"exit={result['exit']} step={result['step']} "
         f"final_loss={result['history'][-1]['loss']:.4f}"
         if result["history"]

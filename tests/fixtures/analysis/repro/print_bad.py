@@ -1,0 +1,14 @@
+"""no-bare-print BAD fixture: library code printing straight to stdout.
+
+A recorded run loses these lines entirely — the flight recorder never
+sees them — and there is no level/structure to filter on.
+"""
+
+
+def report_progress(n_done: int, n_total: int) -> None:
+    print(f"{n_done}/{n_total} cells ok")  # fires: bare print in a library
+
+
+def debug_dump(rows) -> None:
+    for row in rows:
+        print(row)  # fires: bare print in a loop is still a bare print

@@ -1,0 +1,21 @@
+"""no-bare-print GOOD fixture: diagnostics through the sanctioned paths.
+
+``obs.log`` reaches stdout AND the active tracer; attribute calls named
+``print`` (another object's API) are not bare prints; an inline allow
+with a justification survives for the rare legitimate case.
+"""
+
+from repro import obs
+
+
+def report_progress(n_done: int, n_total: int) -> None:
+    obs.log(f"{n_done}/{n_total} cells ok")  # the sanctioned emitter
+
+
+def render(table) -> None:
+    table.print()  # quiet: someone else's .print() API, not the builtin
+
+
+def raw_banner(msg: str) -> None:
+    # quiet: justified inline allow — stdout handshake parsed by a wrapper
+    print(msg)  # repro: allow(no-bare-print)

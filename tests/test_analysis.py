@@ -50,6 +50,7 @@ RULE_FIXTURES = [
     ("cache-key-frozen", "cachekey_bad.py", 4, "cachekey_good.py"),
     ("jit-purity", "jit_bad.py", 3, "jit_good.py"),
     ("unit-suffix", "units_bad.py", 3, "units_good.py"),
+    ("no-bare-print", "repro/print_bad.py", 2, "repro/print_good.py"),
 ]
 
 
@@ -144,7 +145,8 @@ def test_json_schema_is_stable(tmp_path):
     assert set(payload["counts"]) == {
         "files", "findings", "new", "baselined", "suppressed", "parse_errors",
     }
-    assert payload["counts"]["suppressed"] == 1  # fleet/suppressed.py
+    # fleet/suppressed.py + the justified allow in repro/print_good.py
+    assert payload["counts"]["suppressed"] == 2
     for f in payload["findings"]:
         assert set(f) == {
             "rule", "path", "line", "col", "message", "symbol", "baselined",

@@ -1,9 +1,10 @@
 """The trajectory perf gate: scripts/check_trajectory.py.
 
 Synthetic histories prove the gate (a) stays quiet on healthy noise,
-(b) fails a real >20% cliff in either metric, (c) never gates on thin
-history, (d) only compares entries with the same ``quick`` flag, and
-(e) passes on the SHIPPED history — verify.sh runs this script
+(b) fails a real >20% cliff in either metric, (c) never trend-gates on
+thin history, (d) only compares entries with the same ``quick`` flag,
+(e) enforces the obs absolute-ceiling budgets even without priors, and
+(f) passes on the SHIPPED history — verify.sh runs this script
 unconditionally, so a red gate here means a bricked verify loop.
 
 Stdlib-only, fast loop.
@@ -23,12 +24,18 @@ gate = importlib.util.module_from_spec(spec)
 spec.loader.exec_module(gate)
 
 
-def entry(speedup, look=1.3, quick=False, scale=None):
+def entry(speedup, look=1.3, quick=False, scale=None, obs=None, null=None):
     results = {
         "fleet": {"speedup": speedup, "lookahead_overhead_ratio": look}
     }
     if scale is not None:
         results["engine_scale"] = {"scale_speedup": scale}
+    if obs is not None or null is not None:
+        results["obs"] = {}
+        if obs is not None:
+            results["obs"]["overhead_ratio"] = obs
+        if null is not None:
+            results["obs"]["null_overhead_ratio"] = null
     return {
         "run_at": "2026-01-01T00:00:00",
         "quick": quick,
@@ -69,6 +76,23 @@ def test_missing_engine_scale_section_is_not_a_failure():
 def test_thin_history_never_gates():
     assert gate.check([], 0.20) == []
     assert gate.check([entry(12.0), entry(1.0)], 0.20) == []
+
+
+def test_obs_ceiling_fails_even_on_thin_history():
+    # a design budget does not need priors to be violated
+    problems = gate.check([entry(12.0, obs=1.08)], 0.20)
+    assert len(problems) == 1
+    assert "obs.overhead_ratio" in problems[0] and "ceiling" in problems[0]
+    problems = gate.check([entry(12.0, obs=1.01, null=1.02)], 0.20)
+    assert len(problems) == 1 and "null_overhead_ratio" in problems[0]
+
+
+def test_obs_within_budget_passes():
+    history = [entry(s, obs=1.01, null=1.002) for s in (14.0, 15.0, 13.0, 14.5)]
+    assert gate.check(history, 0.20) == []
+    # ceilings bind the LATEST entry only: an old breach is history
+    history = [entry(14.0, obs=1.50)] + history[1:]
+    assert gate.check(history, 0.20) == []
 
 
 def test_quick_entries_are_not_compared_with_full_entries():
