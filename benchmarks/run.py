@@ -89,6 +89,12 @@ def _run_obs(quick: bool) -> None:
     bench_obs.run()
 
 
+def _run_service(quick: bool) -> None:
+    from benchmarks import bench_service
+
+    bench_service.run()
+
+
 # name -> runner; insertion order is execution order for a full run
 BENCHES = {
     "kernels": _run_kernels,
@@ -101,6 +107,7 @@ BENCHES = {
     "fleet": _run_fleet,
     "analysis": _run_analysis,
     "obs": _run_obs,
+    "service": _run_service,
 }
 
 

@@ -12,6 +12,8 @@ the LATEST entry's fleet metrics regress more than ``--threshold``
   batched path at the largest B; higher is better)
 * ``obs.overhead_ratio`` / ``obs.null_overhead_ratio`` (flight-recorder
   cost on the scheduling round, recording and default-off)
+* ``service.overhead_ratio`` (event-driven ``SchedulerService`` run vs
+  the lockstep ``run()`` on the same trace; lower is better)
 
 The reference is the **median of the prior comparable entries** (same
 ``quick`` flag), not the best-ever entry: single-shot container timings
@@ -48,6 +50,7 @@ METRICS: Tuple[Tuple, ...] = (
     ("engine_scale", "scale_speedup", +1),
     ("obs", "overhead_ratio", -1, 1.03),
     ("obs", "null_overhead_ratio", -1, 1.005),
+    ("service", "overhead_ratio", -1, 1.15),
 )
 
 

@@ -12,7 +12,14 @@
 #     violation fails the gate before the tests even start.
 #   * the trajectory perf gate — scripts/check_trajectory.py fails if
 #     the latest benchmark trajectory entry regressed >20% against the
-#     median of its prior comparable entries.
+#     median of its prior comparable entries (plus absolute ceilings,
+#     e.g. service.overhead_ratio <= 1.15).
+#
+# The fast loop includes the service-layer gates: replay determinism
+# (tests/test_service.py) and the early/mid/late crash-recovery slice +
+# single-fault recovery (tests/test_service_recovery.py) are unmarked,
+# so `--fast` covers them; the exhaustive kill-at-every-batch sweeps
+# ride the slow tier.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

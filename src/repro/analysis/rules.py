@@ -1,4 +1,4 @@
-"""The eight enforced contracts, as AST checks.
+"""The nine enforced contracts, as AST checks.
 
 Each rule pins one documented invariant whose violation was (or would
 be) the root cause of a shipped bug or a perf cliff:
@@ -25,6 +25,11 @@ be) the root cause of a shipped bug or a perf cliff:
 * ``no-bare-print``      — library code emits diagnostics through
   ``repro.obs.log`` (stdout plus the flight recorder), never bare
   ``print()``; ``__main__.py`` CLI drivers are exempt.
+* ``sim-clock-purity``   — scheduler/service code paths never read the
+  wall clock (``time.time``/``monotonic``/``perf_counter``,
+  ``datetime.now``): the fleet is deterministic sim-time, and one host
+  timestamp on a decision path breaks bitwise replay and journal
+  recovery.
 
 Heuristics are deliberately syntactic — this is a contract linter, not a
 type system. Anything it cannot see (aliasing, dynamic dispatch) is out
@@ -725,7 +730,69 @@ def check_unit_suffix(
 
 
 # ---------------------------------------------------------------------------
-# 8 · no-bare-print
+# 8 · sim-clock-purity
+# ---------------------------------------------------------------------------
+
+# time-module readers of the host clock (attribute form: time.<attr>())
+_WALL_CLOCK_ATTRS = {
+    "time",
+    "time_ns",
+    "monotonic",
+    "monotonic_ns",
+    "perf_counter",
+    "perf_counter_ns",
+    "process_time",
+    "process_time_ns",
+}
+# datetime readers (datetime.now() / datetime.datetime.utcnow() / ...)
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+# bare-name forms unambiguous enough to flag (``from time import
+# monotonic``); plain ``time()``/``now()`` are too generic to attribute
+_WALL_CLOCK_NAMES = (_WALL_CLOCK_ATTRS - {"time"}) | {"utcnow"}
+
+
+@register(
+    "sim-clock-purity",
+    "wall-clock read on a sim-clock code path",
+    "fleet scheduling/service code is deterministic sim-time: a host "
+    "timestamp (time.time/monotonic/perf_counter, datetime.now) on a "
+    "decision path breaks bitwise replay and journal recovery",
+    _scope_sim_clock,
+)
+def check_sim_clock_purity(
+    tree: ast.Module, src: str, path: str
+) -> Iterable[Finding]:
+    _annotate_parents(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            root = _root_name(func)
+            wall = root == "time" and func.attr in _WALL_CLOCK_ATTRS
+            dt = root == "datetime" and func.attr in _DATETIME_ATTRS
+            if wall or dt:
+                yield _find(
+                    "sim-clock-purity",
+                    path,
+                    node,
+                    f"wall-clock read {_dotted(func)}() on a sim-clock "
+                    "code path — schedule on the sim clock (event/batch "
+                    "times); host time breaks bitwise replay",
+                )
+        elif isinstance(func, ast.Name) and func.id in _WALL_CLOCK_NAMES:
+            yield _find(
+                "sim-clock-purity",
+                path,
+                node,
+                f"wall-clock read {func.id}() on a sim-clock code path — "
+                "schedule on the sim clock (event/batch times); host "
+                "time breaks bitwise replay",
+            )
+
+
+# ---------------------------------------------------------------------------
+# 9 · no-bare-print
 # ---------------------------------------------------------------------------
 
 

@@ -359,6 +359,10 @@ class FleetNode:
         self.node = Node(seed=seed, power_coeffs=spec.truth_coeffs(base_coeffs))
         self._drift: Dict[str, float] = {}
         self.reservations: List[Reservation] = []
+        # service-layer availability: a node the fleet service declared
+        # down (crash / heartbeat loss) offers ZERO capacity until a
+        # node-up event restores it. Always True in lockstep simulations.
+        self.available: bool = True
 
     @property
     def name(self) -> str:
@@ -457,7 +461,7 @@ class FleetNode:
         (executing) reservations.
         """
         return CapacityProfile(
-            self.spec.max_cores,
+            self.spec.max_cores if self.available else 0,
             [
                 (r.start_s, r.end_s, r.cores)
                 for r in self.reservations
@@ -482,6 +486,8 @@ class FleetNode:
         *now*; half-open interval accounting only charges a query for
         reservations it actually overlaps.
         """
+        if not self.available:  # a down node offers no capacity at all
+            return 0
         if end_s is None:
             # instantaneous fast path: this runs per node per job per
             # round in every placement/migration/FIFO loop — a direct sum

@@ -181,6 +181,8 @@ def run_engine_fleet(
     negotiate: bool = False,
     migration: Optional[MigrationPolicy] = None,
     lookahead: Optional[LookaheadPolicy] = None,
+    service: bool = False,
+    service_kw: Optional[dict] = None,
     name: str = "engine",
 ) -> Tuple[ScenarioStats, FleetScheduler]:
     """The planned fleet: one ``FleetScheduler`` over the whole trace.
@@ -192,6 +194,11 @@ def run_engine_fleet(
     round horizon-aware: known future arrivals join the batched pass and
     hold capacity with tentative reservations. Per-job energies include
     preempted partial segments and migration charges.
+
+    ``service=True`` pumps the run through the event-driven
+    ``SchedulerService`` instead of the lockstep loop (bitwise-identical
+    schedule by contract); ``service_kw`` passes through to its
+    constructor (``journal=...``, ``kill_at_s=...``, ...).
     """
     engine = engine if engine is not None else fleet_engine(pool)
     sched = FleetScheduler(
@@ -209,7 +216,15 @@ def run_engine_fleet(
     # share one recording in a comparison run)
     reg = obs.metrics_registry()
     before = reg.snapshot() if reg.enabled else None
-    completed = sched.run(jobs, drift_events=drift_events)
+    if service:
+        # deferred import: the service layer is optional machinery on
+        # top of the scheduler, not a report dependency
+        from repro.fleet.service import SchedulerService
+
+        svc = SchedulerService(sched, **dict(service_kw or {}))
+        completed = svc.run(jobs, drift_events=drift_events)
+    else:
+        completed = sched.run(jobs, drift_events=drift_events)
     rollup = (
         obs_metrics.diff(before, reg.snapshot()) if reg.enabled else {}
     )

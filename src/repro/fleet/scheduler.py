@@ -45,6 +45,14 @@ Two opt-in upgrades close the remaining gaps (PR 4):
   material drift re-fit re-plans the family's in-flight jobs and moves
   them when the believed remaining-energy saving clears the migration
   cost — with the abandoned joules honestly charged.
+
+Two drivers pump the round. ``run()`` is the lockstep simulation loop
+(rounds fire at the next arrival/completion/drift time). The
+event-driven service core (``repro.fleet.service``) pumps the SAME
+``step()`` as a reaction to event batches, adds durable snapshot/journal
+state, node failures and crash recovery — and reproduces the lockstep
+schedule bitwise (``tests/test_service.py``). ``step()`` is the shared
+reaction; ``run()`` doubles as the parity oracle.
 """
 
 from __future__ import annotations
@@ -131,6 +139,9 @@ class CompletedJob:
     prior_energy_j: float = 0.0
     prior_time_s: float = 0.0
     migrations: int = 0
+    # how often a node failure killed a segment and the job was requeued
+    # (service mode) — crash restarts do not consume the migration budget
+    restarts: int = 0
 
     @property
     def total_energy_j(self) -> float:
@@ -340,6 +351,27 @@ class FleetScheduler:
         # last refresh's believed-scale ratio per family (new/old) — the
         # migration pass's materiality signal
         self._refit_ratio: Dict[Family, float] = {}
+        # -- service-layer seams (repro.fleet.service) --------------------
+        # All empty/None in lockstep mode: zero behavior change unless an
+        # event-driven service attaches itself.
+        #   _launch_observers: called with each enqueued CompletedJob so
+        #       the service can stream the completion onto its event bus;
+        #   _preempt_observers: called with (CompletedJob, now) when a
+        #       migration removes an in-flight segment, so the service can
+        #       invalidate the segment's stale completion event;
+        #   _executor: when set, replaces the direct node run — worker
+        #       NodeManagers claim placements through it;
+        #   _carry: job_id -> (energy_j, time_s, migrations, restarts)
+        #       priors from segments killed by a node failure, merged into
+        #       the job's next launch so the ledger stays honest;
+        #   _installed_sets: family -> (terms, X, y) behind every
+        #       telemetry-installed fit — what crash recovery must re-fit
+        #       (deterministically) to rebuild the engine cache.
+        self._launch_observers: List = []
+        self._preempt_observers: List = []
+        self._executor = None
+        self._carry: Dict[int, Tuple[float, float, int, int]] = {}
+        self._installed_sets: Dict[Family, tuple] = {}
 
     # -- the believed model ------------------------------------------------
 
@@ -771,30 +803,34 @@ class FleetScheduler:
         prior_energy_j: float = 0.0,
         prior_time_s: float = 0.0,
         migrations: int = 0,
+        restarts: int = 0,
         work_frac: float = 1.0,
     ) -> None:
         """Run a placement (or, after a preemption, the ``work_frac``
         remainder of one) and enqueue its completion."""
         job = placement.job
         node = self._node_by_name(placement.node)
-        result = self._run_on(
-            node, job, placement.frequency_ghz, placement.cores
-        )
+        run = self._run_on if self._executor is None else self._executor
+        result = run(node, job, placement.frequency_ghz, placement.cores)
         if work_frac < 1.0:  # the remainder of a preempted job
             result = node.rescale(result, work_frac)
         finish = placement.start_s + result.time_s
         node.reserve(placement.start_s, finish, placement.cores, job.job_id)
-        self._finish_queue.append(
-            CompletedJob(
-                placement=placement,
-                result=result,
-                finish_s=finish,
-                met_deadline=finish <= job.deadline_s + time_eps(job.deadline_s),
-                prior_energy_j=prior_energy_j,
-                prior_time_s=prior_time_s,
-                migrations=migrations,
-            )
+        # merge priors carried over from segments a node failure killed
+        ce, ct, cm, cr = self._carry.pop(job.job_id, (0.0, 0.0, 0, 0))
+        completed = CompletedJob(
+            placement=placement,
+            result=result,
+            finish_s=finish,
+            met_deadline=finish <= job.deadline_s + time_eps(job.deadline_s),
+            prior_energy_j=prior_energy_j + ce,
+            prior_time_s=prior_time_s + ct,
+            migrations=migrations + cm,
+            restarts=restarts + cr,
         )
+        self._finish_queue.append(completed)
+        for cb in self._launch_observers:
+            cb(completed)
 
     def _ingest(self, now: float) -> None:
         """Stream finished runs (finish time <= now) into telemetry."""
@@ -904,6 +940,9 @@ class FleetScheduler:
             self.engine.install_fit(
                 key, model, svr_mod.pae_from_pred(pred, y), terms
             )
+            # remember the training set: crash recovery re-fits it to
+            # rebuild this cache entry (see fleet/service/store.py)
+            self._installed_sets[fam] = (terms, x, y)
             self.telemetry.mark_refreshed(fam, now)
         obs.counter("fleet.refits").inc(len(stale))
         return stale
@@ -1067,6 +1106,8 @@ class FleetScheduler:
         remaining_true = max(1.0 - done_frac, 0.0)
         old_node.truncate_reservation(job.job_id, now)
         self._finish_queue.remove(c)
+        for cb in self._preempt_observers:
+            cb(c, now)
         self.telemetry.record_preemption(
             PreemptionRecord(
                 time_s=now,
@@ -1103,6 +1144,7 @@ class FleetScheduler:
             prior_energy_j=c.prior_energy_j + burned + pol.cost_j,
             prior_time_s=c.prior_time_s + elapsed,
             migrations=c.migrations + 1,
+            restarts=c.restarts,
             work_frac=remaining_true,
         )
 
@@ -1120,6 +1162,12 @@ class FleetScheduler:
 
         ``drift_events`` are (sim time, app, time factor) truth shifts
         applied fleet-wide — the scheduler is not told; telemetry notices.
+
+        This is the LOCKSTEP driver — the event-driven
+        ``repro.fleet.service.SchedulerService`` replays the identical
+        schedule from its event bus (bitwise on joules, misses, makespan
+        and per-job configs), so this loop doubles as the parity oracle
+        for the service core.
         """
         self._pending = sorted(jobs, key=lambda j: (j.arrival_s, j.job_id))
         events = sorted(drift_events)

@@ -254,3 +254,74 @@ class TelemetryHub:
         return float(
             sum(p.burned_j + p.migration_cost_j for p in self.preemptions)
         )
+
+    # -- durable state (the fleet service's journal) ----------------------
+    #
+    # The service-layer journal snapshots the WHOLE hub — including the
+    # drift detector's sliding windows. A recovered service that rebuilt
+    # its windows empty would silently forget drift it had already half
+    # detected (the first post-restart rounds would plan on a surface the
+    # evidence had already condemned), so the windows are first-class
+    # durable state, not a cache.
+
+    def to_json(self) -> dict:
+        """The hub's full state as a JSON-serializable dict (families are
+        encoded as ``[app, input_size]`` pairs)."""
+        det = self.detector
+        return {
+            "window": det.window,
+            "threshold": det.threshold,
+            "min_samples": det.min_samples,
+            "observations": [dataclasses.asdict(o) for o in self.observations],
+            "errors": [
+                [list(fam), list(errs)]
+                for fam, errs in sorted(det._errors.items())
+            ],
+            "refreshes": [[t, list(fam)] for t, fam in self.refreshes],
+            "preemptions": [dataclasses.asdict(p) for p in self.preemptions],
+            "tentatives": [dataclasses.asdict(t) for t in self.tentatives],
+            "last_obs_s": [
+                [list(fam), t] for fam, t in sorted(self._last_obs_s.items())
+            ],
+        }
+
+    @classmethod
+    def from_json(cls, payload: dict) -> "TelemetryHub":
+        """Rebuild a hub bit-for-bit from ``to_json`` output.
+
+        State is restored by direct assignment, NOT by replaying
+        ``record``: a replay would re-derive the detector windows from the
+        full observation log, but the real windows are bounded deques that
+        ``mark_refreshed`` resets — only the journaled deques themselves
+        reproduce the detector's exact post-refresh state.
+        """
+
+        def _fam(pair) -> Family:
+            return (str(pair[0]), float(pair[1]))
+
+        hub = cls(
+            window=int(payload["window"]),
+            threshold=float(payload["threshold"]),
+            min_samples=int(payload["min_samples"]),
+        )
+        hub.observations = [
+            Observation(**{**o, "family": _fam(o["family"])})
+            for o in payload["observations"]
+        ]
+        for fam, errs in payload["errors"]:
+            hub.detector._errors[_fam(fam)] = collections.deque(
+                (float(e) for e in errs), maxlen=hub.detector.window
+            )
+        hub.refreshes = [(float(t), _fam(fam)) for t, fam in payload["refreshes"]]
+        hub.preemptions = [
+            PreemptionRecord(**{**p, "family": _fam(p["family"])})
+            for p in payload["preemptions"]
+        ]
+        hub.tentatives = [
+            TentativeRecord(**{**t, "family": _fam(t["family"])})
+            for t in payload["tentatives"]
+        ]
+        hub._last_obs_s = {
+            _fam(fam): float(t) for fam, t in payload["last_obs_s"]
+        }
+        return hub

@@ -1,0 +1,13 @@
+"""Fixture: wall-clock reads on a sim-clock code path — sim-clock-purity
+fires three times (time.time attribute form, datetime.now, bare
+monotonic from-import form)."""
+
+import time
+from datetime import datetime
+from time import monotonic
+
+
+def next_deadline_s(job):
+    started_s = time.time()
+    stamp = datetime.now()
+    return started_s + monotonic(), stamp

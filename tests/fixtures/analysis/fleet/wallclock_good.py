@@ -1,0 +1,9 @@
+"""Fixture: time flows from the sim clock (event batch instants), never
+the host — quiet."""
+
+from repro.fleet.cluster import time_eps
+
+
+def next_deadline_s(now_s, jobs):
+    due = [j.deadline_s for j in jobs if j.arrival_s <= now_s + time_eps(now_s)]
+    return min(due, default=now_s)

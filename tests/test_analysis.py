@@ -51,6 +51,8 @@ RULE_FIXTURES = [
     ("jit-purity", "jit_bad.py", 3, "jit_good.py"),
     ("unit-suffix", "units_bad.py", 3, "units_good.py"),
     ("no-bare-print", "repro/print_bad.py", 2, "repro/print_good.py"),
+    ("sim-clock-purity", "fleet/wallclock_bad.py", 3,
+     "fleet/wallclock_good.py"),
 ]
 
 

@@ -91,7 +91,8 @@ import benchmarks.run as bench_main
 
 for mod, flags in (
     (fleet_main, ("--quick", "--artifacts", "--fallback", "--json",
-                  "--nodes", "--horizon", "--burst")),
+                  "--nodes", "--horizon", "--burst",
+                  "--service", "--journal", "--kill-at", "--resume")),
     (eval_main, ("--quick", "--objective")),
     (lint_main, ("--json", "--baseline", "--write-baseline", "--select",
                  "--list-rules")),

@@ -1,0 +1,220 @@
+"""Crash-recovery golden tests: kill the service at every batch index.
+
+The durability contract under test: a ``SchedulerService`` killed after
+ANY committed batch and restarted from its journal (fresh process, fresh
+scheduler, fresh engine) completes a schedule **bitwise-identical** to
+the uninterrupted golden run — same per-job (node, f, cores), same
+joules, same refreshes/preemptions/rounds, same total batch count.
+
+Two scenarios split the coverage:
+
+* the **lookahead scenario** (drift + horizon holds): kills land between
+  drift observation and refit (telemetry windows must survive the
+  journal — the satellite bugfix), and while tentative holds are
+  outstanding (recovery restores them as holds for the next reaction to
+  re-confirm or release);
+* the **migration scenario** (the eager two-node rebalancer from
+  ``test_negotiate``): kills land around a preemption, so recovery also
+  covers in-flight reservation truncation, stale completion generations
+  and carried-prior accounting.
+
+The exhaustive sweeps are ``slow``; a three-index (early/mid/late) fast
+variant runs in tier-1 / ``verify.sh --fast``.
+"""
+
+import pytest
+
+from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
+from repro.fleet import (
+    FleetNode,
+    FleetScheduler,
+    Job,
+    LookaheadPolicy,
+    MigrationPolicy,
+    Negotiator,
+    NodePool,
+    NodeSpec,
+    fleet_engine,
+    make_pool,
+)
+from repro.fleet.service import SchedulerService, ServiceKilled
+
+from test_service import (
+    QUICK_CORES,
+    QUICK_ENGINE_KW,
+    QUICK_FREQS,
+    fingerprint,
+    trace,
+)
+
+# -- scenario builders (fresh scheduler per process incarnation) ------------
+
+
+def _lookahead_scheduler():
+    pool = make_pool(3, seed=0)
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    return FleetScheduler(
+        pool,
+        engine,
+        char_freqs=QUICK_FREQS[::2],
+        char_cores=(1, 8, 16, 32),
+        negotiator=Negotiator(pool, engine.power),
+        lookahead=LookaheadPolicy(horizon_s=600.0),
+    )
+
+
+def _lookahead_jobs():
+    jobs = trace(12, spacing=120.0, slack=2.5)
+    drift = [(jobs[0].arrival_s + 1.0, jobs[0].app, 1.7)]
+    return jobs, drift
+
+
+def _migration_scheduler():
+    # the eager two-node rebalancer scenario from test_negotiate: drift
+    # re-fit preempts an in-flight job off the expensive node
+    specs = [
+        NodeSpec("good-0"),
+        NodeSpec(
+            "bad-1",
+            static_power_skew=1.5,
+            dynamic_power_skew=1.4,
+            speed_skew=1.3,
+        ),
+    ]
+    pool = NodePool([FleetNode(s, seed=101 * i) for i, s in enumerate(specs)])
+    engine = fleet_engine(pool, **QUICK_ENGINE_KW)
+    return FleetScheduler(
+        pool,
+        engine,
+        char_freqs=QUICK_FREQS[::2],
+        char_cores=(1, 8, 16, 32),
+        migration=MigrationPolicy(
+            cost_j=100.0,
+            min_drift=0.10,
+            min_remaining_frac=0.05,
+            min_saving_frac=0.01,
+        ),
+    )
+
+
+def _migration_jobs():
+    jobs = [
+        Job(0, "blackscholes", 3.0, deadline_s=1e6, arrival_s=0.0),
+        Job(1, "swaptions", 1.0, deadline_s=1e6, arrival_s=10.0),
+        Job(2, "swaptions", 1.0, deadline_s=520.0, arrival_s=20.0),
+        Job(3, "swaptions", 1.0, deadline_s=530.0, arrival_s=30.0),
+        Job(4, "swaptions", 1.0, deadline_s=540.0, arrival_s=40.0),
+    ]
+    return jobs, [(15.0, "swaptions", 1.8)]
+
+
+SCENARIOS = {
+    "lookahead": (_lookahead_scheduler, _lookahead_jobs),
+    "migration": (_migration_scheduler, _migration_jobs),
+}
+
+
+def _golden(name, tmp_path):
+    """The uninterrupted run (with a journal, so batch timing matches the
+    killed runs commit-for-commit) + its fingerprint and batch count."""
+    build, trace_fn = SCENARIOS[name]
+    jobs, drift = trace_fn()
+    sched = build()
+    service = SchedulerService(sched, journal=str(tmp_path / "golden.json"))
+    service.run(jobs, drift_events=drift)
+    return service, fingerprint(sched)
+
+
+def _kill_and_resume(name, tmp_path, k):
+    """Kill before batch ``k``, restart from the journal, drain."""
+    build, trace_fn = SCENARIOS[name]
+    jobs, drift = trace_fn()
+    path = str(tmp_path / f"kill-{k}.json")
+    sched = build()
+    service = SchedulerService(sched, journal=path, kill_after_batches=k)
+    with pytest.raises(ServiceKilled):
+        service.run(jobs, drift_events=drift)
+    fresh = build()  # the restarted process: rebuilt objects, journaled state
+    resumed = SchedulerService.resume(path, fresh)
+    assert resumed.recovered
+    resumed.drain()
+    return resumed, fingerprint(fresh)
+
+
+def _assert_scenario_exercises_its_coverage(name, service, sched):
+    if name == "lookahead":
+        assert sched.telemetry.refreshes, "drift refit never fired"
+        assert sum(r.n_tentative for r in sched.rounds) > 0, (
+            "no tentative holds — the lookahead sweep is not covering them"
+        )
+    else:
+        assert sched.telemetry.preemptions, "migration never fired"
+        assert any(c.migrations > 0 for c in sched.completed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_kill_at_every_batch_index_replays_bitwise(name, tmp_path):
+    golden_service, golden_fp = _golden(name, tmp_path)
+    _assert_scenario_exercises_its_coverage(
+        name, golden_service, golden_service.scheduler
+    )
+    n = golden_service.n_batches
+    assert n > 3, "scenario too small to sweep meaningfully"
+    for k in range(n):
+        resumed, fp = _kill_and_resume(name, tmp_path, k)
+        assert fp == golden_fp, f"kill at batch {k}: schedule diverged"
+        assert resumed.n_batches == n, (
+            f"kill at batch {k}: resumed run took {resumed.n_batches} "
+            f"batches, golden took {n}"
+        )
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_kill_early_mid_late_replays_bitwise(name, tmp_path):
+    """The fast (tier-1 / verify.sh --fast) slice of the exhaustive
+    sweep: genesis commit, mid-run, and the final batch."""
+    golden_service, golden_fp = _golden(name, tmp_path)
+    _assert_scenario_exercises_its_coverage(
+        name, golden_service, golden_service.scheduler
+    )
+    n = golden_service.n_batches
+    for k in (0, n // 2, n - 1):
+        resumed, fp = _kill_and_resume(name, tmp_path, k)
+        assert fp == golden_fp, f"kill at batch {k}: schedule diverged"
+        assert resumed.n_batches == n
+
+
+def test_recovery_restores_half_detected_drift(tmp_path):
+    """The satellite bugfix's regression test: kill BETWEEN the drift
+    observation and the refit it will trigger. The detector's sliding
+    windows live only in ``TelemetryHub`` — if the journal dropped them
+    (the bug), the resumed run would never refresh and the schedule
+    would silently diverge from golden."""
+    golden_service, golden_fp = _golden("lookahead", tmp_path)
+    sched_g = golden_service.scheduler
+    assert sched_g.telemetry.refreshes
+    t_refresh = sched_g.telemetry.refreshes[0][0]
+
+    build, trace_fn = SCENARIOS["lookahead"]
+    jobs, drift = trace_fn()
+    path = str(tmp_path / "half-detected.json")
+    sched = build()
+    # dies on the refresh batch itself: the last commit holds observed
+    # errors that have NOT yet triggered the refit
+    service = SchedulerService(
+        sched, journal=path, kill_at_s=t_refresh - 1e-6
+    )
+    with pytest.raises(ServiceKilled):
+        service.run(jobs, drift_events=drift)
+
+    fresh = build()
+    resumed = SchedulerService.resume(path, fresh)
+    hub = fresh.telemetry
+    assert any(hub.detector._errors.values()), (
+        "journal dropped the drift detector's windows — the half-detected "
+        "drift was forgotten"
+    )
+    resumed.drain()
+    assert fresh.telemetry.refreshes == sched_g.telemetry.refreshes
+    assert fingerprint(fresh) == golden_fp
