@@ -1,0 +1,83 @@
+"""Space-generic TPU planning vs the checked-in seed plans.
+
+``experiments/bench/tpu_planner.json`` holds the model-zoo plans the
+legacy (implicit-TPU-grid) engine produced. This bench re-plans the same
+workloads through an engine built on an EXPLICIT ``tpu_space()`` — the
+device-generic ``ConfigSpace`` path every layer now shares — and asserts
+config parity per workload: same chips, frequency, pods and mesh. A
+mismatch means the generic axis moved a planning decision, which the
+ConfigSpace refactor promises never to do.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timed
+from repro.configs.base import SHAPES
+from repro.core.engine import PlanningEngine, Workload, tpu_space
+from repro.core.tpu_power import FleetTelemetry, fit_fleet_power
+
+# the tpu_planner seed's workload list, verbatim
+WORKLOADS = [
+    ("qwen1.5-110b", "train_4k"),
+    ("phi3.5-moe-42b-a6.6b", "train_4k"),
+    ("gemma3-12b", "prefill_32k"),
+    ("gemma3-12b", "decode_32k"),
+    ("starcoder2-3b", "train_4k"),
+    ("zamba2-7b", "long_500k"),
+    ("mamba2-130m", "train_4k"),
+]
+
+SEED_PATH = "experiments/bench/tpu_planner.json"
+
+
+def _load_seed():
+    import json
+    import os
+
+    if not os.path.exists(SEED_PATH):
+        return None
+    with open(SEED_PATH) as f:
+        return json.load(f)
+
+
+def run():
+    engine = PlanningEngine(
+        fit_fleet_power(FleetTelemetry(seed=0)),
+        space=tpu_space(),
+        noise=0.01,
+        seed=0,
+    )
+    requests = [Workload(arch_id, SHAPES[shape]) for arch_id, shape in WORKLOADS]
+    plans, us = timed(engine.plan_many, requests)
+
+    seed = _load_seed()
+    out = {"space": engine.space.name, "plans": {}, "seed_parity": 1.0}
+    for (arch_id, shape), plan in zip(WORKLOADS, plans):
+        key = f"{arch_id}/{shape}"
+        config = dict(
+            chips=int(plan.chips),
+            pods=int(plan.pods),
+            frequency_ghz=float(plan.frequency_ghz),
+            mesh=list(plan.mesh),
+        )
+        out["plans"][key] = config
+        if seed is not None and key in seed:
+            want = {
+                k: (list(seed[key][k]) if k == "mesh" else seed[key][k])
+                for k in config
+            }
+            if config != want:
+                raise AssertionError(
+                    f"bench_tpu: space-generic plan for {key} diverged from "
+                    f"the seed: got {config}, seed has {want}"
+                )
+        emit(
+            f"tpu_space_plan_{arch_id}_{shape}",
+            us / len(plans),
+            f"{config['chips']}chips@{config['frequency_ghz']:.2f}GHz_"
+            f"pods={config['pods']}_seed_parity=1",
+        )
+    out["plan_us_per_workload"] = us / len(plans)
+    emit("tpu_space_plan_many_total", us, f"n={len(plans)}_space={engine.space.name}")
+    save_json("bench_tpu", out)
+    return out

@@ -53,6 +53,12 @@ def _run_planner(quick: bool) -> None:
     bench_tpu_planner.run()
 
 
+def _run_bench_tpu(quick: bool) -> None:
+    from benchmarks import bench_tpu
+
+    bench_tpu.run()
+
+
 def _run_engine(quick: bool) -> None:
     from benchmarks import bench_engine
 
@@ -101,6 +107,7 @@ BENCHES = {
     "paper": _run_paper,
     "roofline": _run_roofline,
     "planner": _run_planner,
+    "bench_tpu": _run_bench_tpu,
     "engine": _run_engine,
     "engine_scale": _run_engine_scale,
     "svr_fit": _run_svr_fit,

@@ -48,6 +48,9 @@ METRICS: Tuple[Tuple, ...] = (
     ("fleet", "speedup", +1),
     ("fleet", "lookahead_overhead_ratio", -1),
     ("engine_scale", "scale_speedup", +1),
+    # space-generic TPU planning cost per model-zoo workload; the bench
+    # itself hard-asserts seed-config parity, this only trends the timing
+    ("bench_tpu", "plan_us_per_workload", -1),
     ("obs", "overhead_ratio", -1, 1.03),
     ("obs", "null_overhead_ratio", -1, 1.005),
     ("service", "overhead_ratio", -1, 1.15),

@@ -19,7 +19,9 @@
 # (tests/test_service.py) and the early/mid/late crash-recovery slice +
 # single-fault recovery (tests/test_service_recovery.py) are unmarked,
 # so `--fast` covers them; the exhaustive kill-at-every-batch sweeps
-# ride the slow tier.
+# ride the slow tier. It also covers the heterogeneous-pool path: the
+# mixed CPU+TPU scheduling/journal tests in tests/test_config_space.py
+# (test_mixed_pool_scenario et al.) are unmarked by design.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

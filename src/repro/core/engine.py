@@ -79,6 +79,122 @@ ENGINE_FIT_KW = dict(gamma=0.5, standardize=True, log_target=True, eps=1e-4)
 
 
 # ---------------------------------------------------------------------------
+# the planning axis: a device-generic ConfigSpace
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigSpace:
+    """The device-generic planning axis: one named, ordered grid bundle.
+
+    The paper's methodology — an application-agnostic power surface times
+    an architecture-aware performance model, minimized over a
+    configuration grid — is not CPU-specific. ``ConfigSpace`` names the
+    axis so every layer (engine, fused kernels, fleet placement) can stay
+    generic over it:
+
+    * CPU node:  ``axes = ("f_ghz", "cores")`` — the paper's
+      (frequency, active cores) grid; ``chips_per_pod`` is the socket
+      size, so the derived third coordinate is the active-socket count
+      feeding the static term of Eq. 7.
+    * TPU slice: ``axes = ("f_ghz", "chips", "pods")`` — chips is the
+      parallelism axis and pods is DERIVED (``ceil(chips /
+      chips_per_pod)``), feeding the per-pod static power of the v5e
+      refit (``core.tpu_power``).
+
+    The grid is always the outer product ``freq_grid × chip_grid`` with
+    the pod/socket coordinate derived — the axis tuple is identity (it
+    keys the jitted-callable memo so two engines with different axis
+    semantics never share a compiled sweep), not extra dimensionality.
+    ``device`` is the fleet-placement compatibility tag: a job planned in
+    a space only places on nodes of that device type.
+    """
+
+    name: str
+    device: str  # "cpu" | "tpu" — fleet placement compatibility tag
+    axes: Tuple[str, ...]
+    freq_grid: Tuple[float, ...]
+    chip_grid: Tuple[int, ...]
+    chips_per_pod: int
+
+    def __post_init__(self):
+        if not self.axes or self.axes[0] != "f_ghz":
+            raise ValueError(
+                f"space {self.name!r}: axes must lead with 'f_ghz', "
+                f"got {self.axes!r}"
+            )
+        if not self.freq_grid or not self.chip_grid:
+            raise ValueError(f"space {self.name!r}: empty grid")
+        if self.chips_per_pod < 1:
+            raise ValueError(f"space {self.name!r}: chips_per_pod < 1")
+
+    def meshes(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The (frequency, parallelism, derived pods/sockets) grid meshes,
+        ``indexing="ij"`` — exactly the arrays ``solve_grid`` minimizes
+        over, for any space."""
+        F, C = np.meshgrid(self.freq_grid, self.chip_grid, indexing="ij")
+        return F, C, np.ceil(C / self.chips_per_pod)
+
+    def pods_for(self, chips: int) -> int:
+        """The derived pod (TPU) / socket (CPU) count for a parallelism
+        value."""
+        return int(np.ceil(chips / self.chips_per_pod))
+
+    def snap_cap(self, available: int) -> Optional[int]:
+        """The largest grid parallelism value that fits an ``available``
+        pool (None when the pool sits below the grid floor) — elastic
+        re-planning snaps fallback choices to a real grid configuration
+        with this."""
+        ok = [c for c in self.chip_grid if c <= available]
+        return max(ok) if ok else None
+
+
+def tpu_space(
+    freq_grid: Sequence[float] = tuple(F_GRID),
+    chip_grid: Sequence[int] = CHIP_GRID,
+    chips_per_pod: int = 256,
+    name: str = "tpu-v5e",
+) -> ConfigSpace:
+    """The TPU-pod planning axis: (f_ghz, chips) grid with pods derived at
+    ``chips_per_pod`` (v5e: 256 chips/pod), Eq. 7 refit power surface."""
+    return ConfigSpace(
+        name=name,
+        device="tpu",
+        axes=("f_ghz", "chips", "pods"),
+        freq_grid=tuple(float(f) for f in freq_grid),
+        chip_grid=tuple(int(c) for c in chip_grid),
+        chips_per_pod=int(chips_per_pod),
+    )
+
+
+def cpu_space(
+    freq_grid: Optional[Sequence[float]] = None,
+    chip_grid: Optional[Sequence[int]] = None,
+    cores_per_socket: Optional[int] = None,
+    name: str = "cpu-node",
+) -> ConfigSpace:
+    """The paper's CPU planning axis: (f_ghz, cores) with active sockets
+    derived at ``cores_per_socket``. Defaults come from the simulated
+    2×16-core node (``core.node_sim``)."""
+    from repro.core import node_sim  # lazy: keep the TPU-only path light
+
+    if freq_grid is None:
+        freq_grid = tuple(node_sim.FREQ_GRID)
+    if chip_grid is None:
+        chip_grid = tuple(range(1, node_sim.MAX_CORES + 1))
+    if cores_per_socket is None:
+        cores_per_socket = node_sim.CORES_PER_SOCKET
+    return ConfigSpace(
+        name=name,
+        device="cpu",
+        axes=("f_ghz", "cores"),
+        freq_grid=tuple(float(f) for f in freq_grid),
+        chip_grid=tuple(int(c) for c in chip_grid),
+        chips_per_pod=int(cores_per_socket),
+    )
+
+
+# ---------------------------------------------------------------------------
 # shared constraint semantics (the single masked argmin)
 # ---------------------------------------------------------------------------
 
@@ -145,10 +261,14 @@ def solve_grid(
 ) -> Tuple[int, ...]:
     """Masked argmin of E·T^k over the grid — the one shared semantics.
 
-    ``on_infeasible`` decides the empty-mask case: ``"raise"`` (ValueError)
-    or ``"fastest"`` (fall back to the minimum-time configuration).
-    ``metric`` may carry a precomputed objective tensor (the batched path);
-    otherwise it is derived from ``objective``.
+    Space-generic by construction: F/P/T/W are whatever meshes the
+    caller's ``ConfigSpace`` produced (cores on the CPU axis, chips on
+    the TPU axis), and the ``TIME_FLOOR`` clamp and ``on_infeasible``
+    behaviour are identical in every space. ``on_infeasible`` decides the
+    empty-mask case: ``"raise"`` (ValueError) or ``"fastest"`` (fall back
+    to the minimum-time configuration). ``metric`` may carry a
+    precomputed objective tensor (the batched path); otherwise it is
+    derived from ``objective``.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; want {sorted(OBJECTIVES)}")
@@ -230,7 +350,7 @@ def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
 
 
 # ---------------------------------------------------------------------------
-# compiled grid callables, memoized on (B, nf, nc) batch geometry
+# compiled grid callables, memoized on (B, nf, nc) batch geometry + space axes
 # ---------------------------------------------------------------------------
 #
 # jax.jit already caches per shape, but implicitly — a refactor that made
@@ -239,7 +359,10 @@ def pareto_frontier(T: np.ndarray, E: np.ndarray) -> List[Tuple[int, ...]]:
 # per batch geometry, held for the life of the process) and countable:
 # TRACE_COUNTS[name] increments only when a callable is actually traced,
 # so the regression test can assert two same-shape plan_many calls
-# compile exactly once.
+# compile exactly once. Keys additionally carry the engine's
+# ``ConfigSpace.axes`` tuple: two spaces whose grids happen to collide in
+# shape still have distinct axis semantics, and the memo must never hand
+# one space's compiled sweep to another.
 
 _GRID_CALLABLE_CACHE: Dict[Tuple, object] = {}
 TRACE_COUNTS: Dict[str, int] = {"objective": 0, "plan_argmin": 0, "pareto": 0}
@@ -261,14 +384,17 @@ def _export_trace_counts() -> None:
         obs.gauge(f"engine.trace_counts.{name}").set(n)
 
 
-def _objective_callable(shape: Tuple[int, int, int]):
-    """The (workload × frequency × cores) metric tensor in one jitted pass.
+def _objective_callable(
+    shape: Tuple[int, int, int], axes: Tuple[str, ...] = ()
+):
+    """The (workload × frequency × parallelism) metric tensor in one jitted
+    pass.
 
-    Returns a compiled ``fn(T, W, k) -> (W·T)·T^k`` for one batch geometry:
-    T (B, nf, nc) step times, W (nf, nc) shared power grid, k (B,)
-    per-workload objective exponent.
+    Returns a compiled ``fn(T, W, k) -> (W·T)·T^k`` for one batch geometry
+    within one config space: T (B, nf, nc) step times, W (nf, nc) shared
+    power grid, k (B,) per-workload objective exponent.
     """
-    key = ("objective", shape)
+    key = ("objective", shape, axes)
     fn = _GRID_CALLABLE_CACHE.get(key)
     _count_callable_lookup(fn)
     if fn is None:
@@ -286,11 +412,13 @@ def _objective_callable(shape: Tuple[int, int, int]):
     return fn
 
 
-def _plan_argmin_callable(shape: Tuple[int, int, int], impl: str):
+def _plan_argmin_callable(
+    shape: Tuple[int, int, int], impl: str, axes: Tuple[str, ...] = ()
+):
     """The fused metric+mask+argmin sweep (``kernels/plan_grid.py``) for one
-    batch geometry: ``fn(T2, W2, k, mask2) -> (B,) int32`` flat indices,
-    with T2/mask2 flattened to (B, nf·nc) C-order."""
-    key = ("plan_argmin", shape, impl)
+    batch geometry within one config space: ``fn(T2, W2, k, mask2) -> (B,)
+    int32`` flat indices, with T2/mask2 flattened to (B, nf·nc) C-order."""
+    key = ("plan_argmin", shape, impl, axes)
     fn = _GRID_CALLABLE_CACHE.get(key)
     _count_callable_lookup(fn)
     if fn is None:
@@ -306,13 +434,15 @@ def _plan_argmin_callable(shape: Tuple[int, int, int], impl: str):
     return fn
 
 
-def _pareto_callable(shape: Tuple[int, int, int], impl: str):
+def _pareto_callable(
+    shape: Tuple[int, int, int], impl: str, axes: Tuple[str, ...] = ()
+):
     """The fused energy-tensor + frontier keep-set sweep for one batch
-    geometry: ``fn(T2, W2, mask2) -> (E2, kept)`` with E2 (B, G) f32 and
-    kept (B, G) bool. E2 = W·max(T, floor) is bitwise the k = 0 objective
-    tensor (E·T^0 multiplies by an exact 1.0), so frontier point values
-    read from it match the unfused path."""
-    key = ("pareto", shape, impl)
+    geometry within one config space: ``fn(T2, W2, mask2) -> (E2, kept)``
+    with E2 (B, G) f32 and kept (B, G) bool. E2 = W·max(T, floor) is
+    bitwise the k = 0 objective tensor (E·T^0 multiplies by an exact 1.0),
+    so frontier point values read from it match the unfused path."""
+    key = ("pareto", shape, impl, axes)
     fn = _GRID_CALLABLE_CACHE.get(key)
     _count_callable_lookup(fn)
     if fn is None:
@@ -533,12 +663,21 @@ class _Fit:
 
 
 class PlanningEngine:
-    """Batched, cache-aware argmin over the (frequency × cores) grid."""
+    """Batched, cache-aware argmin over one ``ConfigSpace`` grid.
+
+    The engine is generic over the planning axis: pass ``space`` (a
+    ``ConfigSpace`` — ``cpu_space()``/``tpu_space()``) to pick the axis
+    bundle, or the legacy ``freq_grid``/``chip_grid``/``chips_per_pod``
+    kwargs, which build the TPU-pod space (the engine's historical
+    default). Per-space power surface: the ``PowerModel`` must match the
+    space (Eq. 7/9 node fit for the CPU axis, the v5e refit for the TPU
+    axis)."""
 
     def __init__(
         self,
         power_model: PowerModel,
         *,
+        space: Optional[ConfigSpace] = None,
         freq_grid: Sequence[float] = tuple(F_GRID),
         chip_grid: Sequence[int] = CHIP_GRID,
         chips_per_pod: int = 256,
@@ -561,17 +700,20 @@ class PlanningEngine:
         # (None = svr.RFF_THRESHOLD).
         self.fused = bool(fused)
         self.rff_threshold = rff_threshold
-        self.freq_grid = tuple(float(f) for f in freq_grid)
-        self.chip_grid = tuple(int(c) for c in chip_grid)
-        self.chips_per_pod = chips_per_pod
+        if space is None:
+            space = tpu_space(freq_grid, chip_grid, chips_per_pod)
+        self.space = space
+        self.freq_grid = space.freq_grid
+        self.chip_grid = space.chip_grid
+        self.chips_per_pod = space.chips_per_pod
         self.dryrun_dir = dryrun_dir
         self.noise = noise
         self.seed = seed
         self.objective = objective
         self.on_infeasible = on_infeasible
-        F, C = np.meshgrid(self.freq_grid, self.chip_grid, indexing="ij")
+        F, C, pods = space.meshes()
         self._F, self._C = F, C
-        self._pods = np.ceil(C / chips_per_pod)
+        self._pods = pods
         self._grid_feats = np.stack([F.ravel(), C.ravel()], 1).astype(np.float32)
         # power is application-agnostic: one grid shared by every workload
         self._W = np.asarray(
@@ -582,7 +724,7 @@ class PlanningEngine:
         # paying it per plan dominated the 10k-workload round.
         cmax = self.chip_grid[-1]
         self._w_base = float(
-            self.power(self.freq_grid[-1], cmax, int(np.ceil(cmax / chips_per_pod)))
+            self.power(self.freq_grid[-1], cmax, space.pods_for(cmax))
         )
         self._fits: Dict[Hashable, _Fit] = {}
 
@@ -845,7 +987,7 @@ class PlanningEngine:
         if not use_fused:
             # exact arm: one objective tensor, one host argmin per workload
             metric = np.asarray(
-                _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
+                _objective_callable((b, nf, nc), self.space.axes)(T_stack, W32, jnp.asarray(k_np)),
                 np.float64,
             )
             return [
@@ -854,7 +996,9 @@ class PlanningEngine:
             ]
         mask = self._mask_stack(workloads, T64)
         feasible = mask.any(axis=(1, 2))
-        sweep = _plan_argmin_callable((b, nf, nc), kernel_ops.resolve_impl(None))
+        sweep = _plan_argmin_callable(
+            (b, nf, nc), kernel_ops.resolve_impl(None), self.space.axes
+        )
         flat = np.asarray(
             sweep(
                 T_stack.reshape(b, nf * nc),
@@ -871,7 +1015,7 @@ class PlanningEngine:
                 int((~feasible).sum())
             )
             metric = np.asarray(
-                _objective_callable((b, nf, nc))(T_stack, W32, jnp.asarray(k_np)),
+                _objective_callable((b, nf, nc), self.space.axes)(T_stack, W32, jnp.asarray(k_np)),
                 np.float64,
             )
             for i in np.flatnonzero(~feasible):
@@ -1082,7 +1226,7 @@ class PlanningEngine:
             # shape into a ~30 ms compile for a constant.
             k = jnp.asarray(np.zeros(b, np.float32))
             E_stack = np.asarray(
-                _objective_callable((b, nf, nc))(T_stack, W32, k), np.float64
+                _objective_callable((b, nf, nc), self.space.axes)(T_stack, W32, k), np.float64
             )
             return [
                 self._frontier_for(w, f, E_stack[i])
@@ -1094,7 +1238,9 @@ class PlanningEngine:
             obs.counter("engine.pareto_many.infeasible_fallback").inc(
                 int((~feasible).sum())
             )
-        sweep = _pareto_callable((b, nf, nc), kernel_ops.resolve_impl(None))
+        sweep = _pareto_callable(
+            (b, nf, nc), kernel_ops.resolve_impl(None), self.space.axes
+        )
         E2, kept = sweep(
             T_stack.reshape(b, nf * nc),
             W32.reshape(1, nf * nc),

@@ -150,16 +150,21 @@ class Node:
         power_coeffs=PAPER_COEFFS,
         power_noise_w: float = 2.4,
         time_noise: float = 0.01,
+        cores_per_socket: int = CORES_PER_SOCKET,
     ):
         self._truth = PowerModel(*power_coeffs)
         self.rng = np.random.default_rng(seed)
         self.power_noise_w = power_noise_w
         self.time_noise = time_noise
+        # the static-power granularity of Eq. 7's s(p) term: cores per
+        # socket on the Xeon node (16), chips per pod when the same truth
+        # model stands in for a TPU slice (fleet mixed pools)
+        self.cores_per_socket = int(cores_per_socket)
 
     # -- measurement substrate -------------------------------------------
 
     def sockets(self, p: int) -> int:
-        return int(np.ceil(p / CORES_PER_SOCKET))
+        return int(np.ceil(p / self.cores_per_socket))
 
     def measure_power(self, f: float, p: int, n_samples: int = 30) -> np.ndarray:
         """IPMI samples (1 Hz) under a full-load stress at (f, p) — §3.3."""

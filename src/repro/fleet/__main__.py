@@ -42,13 +42,15 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro import obs
+from repro.core import tpu_power
 from repro.core.characterize import workloads_from_artifacts
 from repro.core.node_sim import F_MAX, FREQ_GRID, PROFILES
-from repro.fleet.cluster import TermsFamily, make_pool
+from repro.fleet.cluster import TermsFamily, make_mixed_pool, make_pool
 from repro.fleet.report import (
     build_comparison,
     run_engine_fleet,
     run_fleet_comparison,
+    run_mixed_fleet_comparison,
     run_myopic_reference,
     FleetReport,
 )
@@ -57,10 +59,20 @@ from repro.fleet.scheduler import (
     LookaheadPolicy,
     MigrationPolicy,
     fleet_engine,
+    tpu_fleet_engine,
 )
 
 DRIFT_APP = "raytrace"
 DRIFT_FACTOR = 1.6
+
+# the model-zoo workload families a mixed pool's TPU slices serve (the
+# same shapes the tpu_planner bench seeds plans for)
+TPU_ZOO_WORKLOADS = (
+    ("qwen1.5-110b", "train_4k"),
+    ("gemma3-12b", "prefill_32k"),
+    ("starcoder2-3b", "train_4k"),
+    ("mamba2-130m", "train_4k"),
+)
 
 
 def build_jobs(
@@ -150,6 +162,81 @@ def build_artifact_jobs(
     return jobs
 
 
+def build_mixed_jobs(
+    n_jobs: int,
+    *,
+    seed: int = 0,
+    apps: Sequence[str] = tuple(sorted(PROFILES)),
+    input_sizes: Sequence[float] = (1.0, 2.0, 3.0),
+    arrival_spacing_s: float = 220.0,
+    slack_range=(1.4, 4.0),
+    tpu_every: int = 3,
+    tpu_workloads=TPU_ZOO_WORKLOADS,
+) -> List[Job]:
+    """A heterogeneous trace: CPU apps with model-zoo TPU jobs interleaved.
+
+    One arrival clock; every ``tpu_every``-th job is a TPU workload from
+    the zoo. TPU believed surfaces come from ``launch/dryrun.py``
+    artifacts when present, the analytic roofline otherwise — wrapped in
+    ``TermsFamily`` whose ``time_scale`` is the family's seeded step
+    count, so one job is a whole training segment (hundreds of steps),
+    not one step. Deadlines are slack × the optimistic service estimate
+    (256 chips at the TPU table max; 16 cores at f_max on CPU).
+    """
+    # lazy: the zoo shape tables ride on repro.configs (a jax import the
+    # CPU-only trace never needs)
+    from repro.configs.base import SHAPES
+    from repro.core.engine import terms_analytic, terms_from_dryrun
+
+    rng = np.random.default_rng(seed)
+    tpu_f_max = float(tpu_power.F_GRID[-1])
+    families: List[TermsFamily] = []
+    for arch_id, shape in tpu_workloads:
+        base = terms_from_dryrun(arch_id, shape) or terms_analytic(
+            arch_id, SHAPES[shape]
+        )
+        steps = float(rng.integers(60, 240))
+        families.append(
+            TermsFamily(base=base, app=f"{arch_id}:{shape}", time_scale=steps)
+        )
+    jobs: List[Job] = []
+    t = 0.0
+    fi = 0
+    for i in range(n_jobs):
+        if tpu_every > 0 and (i % tpu_every) == tpu_every - 1:
+            fam = families[fi % len(families)]
+            fi += 1
+            est_fast = fam.step_time(tpu_f_max, 256)
+            slack_factor = float(rng.uniform(*slack_range))
+            jobs.append(
+                Job(
+                    job_id=i,
+                    app=fam.app,
+                    input_size=fam.input_size,
+                    deadline_s=t + est_fast * slack_factor,
+                    arrival_s=t,
+                    terms=fam,
+                    device="tpu",
+                )
+            )
+        else:
+            app = apps[i % len(apps)]
+            n = float(input_sizes[int(rng.integers(len(input_sizes)))])
+            est_fast = PROFILES[app].time(F_MAX, 16, n)
+            slack_factor = float(rng.uniform(*slack_range))
+            jobs.append(
+                Job(
+                    job_id=i,
+                    app=app,
+                    input_size=n,
+                    deadline_s=t + est_fast * slack_factor,
+                    arrival_s=t,
+                )
+            )
+        t += float(rng.uniform(0.2, 1.0)) * arrival_spacing_s
+    return jobs
+
+
 def run_artifact_fleet(
     jobs: Sequence[Job],
     *,
@@ -220,15 +307,21 @@ def _grids(quick: bool, seed: int):
             noise=0.01,
             seed=seed,
         )
+        tpu_kw = dict(
+            freqs=tuple(float(f) for f in tpu_power.F_GRID[::2]),
+            noise=0.01,
+            seed=seed,
+        )
         char_freqs = tuple(float(f) for f in FREQ_GRID[::3])
         char_cores = (1, 8, 16, 24, 32)
         input_sizes = (1.0, 2.0)
     else:
         engine_kw = dict(noise=0.01, seed=seed)
+        tpu_kw = dict(noise=0.01, seed=seed)
         char_freqs = None  # planning grid
         char_cores = None
         input_sizes = (1.0, 2.0, 3.0)
-    return engine_kw, char_freqs, char_cores, input_sizes
+    return engine_kw, tpu_kw, char_freqs, char_cores, input_sizes
 
 
 def _build_scheduler_from_config(cfg: dict):
@@ -237,11 +330,23 @@ def _build_scheduler_from_config(cfg: dict):
     holds how to re-create the objects the state loads into)."""
     from repro.fleet.scheduler import FleetScheduler, Negotiator
 
-    engine_kw, char_freqs, char_cores, _ = _grids(
+    engine_kw, tpu_kw, char_freqs, char_cores, _ = _grids(
         bool(cfg["quick"]), int(cfg["seed"])
     )
-    pool = make_pool(int(cfg["nodes"]), seed=int(cfg["seed"]))
-    engine = fleet_engine(pool, **engine_kw)
+    if cfg.get("mixed"):
+        pool = make_mixed_pool(
+            n_cpu=int(cfg["n_cpu"]),
+            n_tpu=int(cfg["n_tpu"]),
+            seed=int(cfg["seed"]),
+        )
+        engine = {
+            "cpu": fleet_engine(pool, **engine_kw),
+            "tpu": tpu_fleet_engine(pool, **tpu_kw),
+        }
+        rep = engine[pool.reference.spec.device]
+    else:
+        pool = make_pool(int(cfg["nodes"]), seed=int(cfg["seed"]))
+        engine = rep = fleet_engine(pool, **engine_kw)
     fallback = bool(cfg["fallback"])
     horizon_s = float(cfg["horizon_s"])
     return FleetScheduler(
@@ -249,7 +354,7 @@ def _build_scheduler_from_config(cfg: dict):
         engine,
         char_freqs=char_freqs,
         char_cores=char_cores,
-        negotiator=None if fallback else Negotiator(pool, engine.power),
+        negotiator=None if fallback else Negotiator(pool, rep.power),
         migration=(
             None
             if fallback
@@ -302,6 +407,14 @@ def main(argv: Optional[Sequence[str]] = None):
         metavar="DIR",
         help="build the job trace from launch/dryrun.py JSON records in DIR "
         "(engine vs engine-fallback comparison; governors need profiles)",
+    )
+    ap.add_argument(
+        "--mixed",
+        action="store_true",
+        help="heterogeneous pool: CPU nodes + TPU slices (--nodes splits "
+        "between them); the trace interleaves profiled CPU apps with "
+        "model-zoo TPU jobs and each device family plans in its own "
+        "ConfigSpace; baseline is the fixed-max-frequency FIFO fleet",
     )
     ap.add_argument(
         "--fallback",
@@ -382,11 +495,17 @@ def main(argv: Optional[Sequence[str]] = None):
     if args.service and args.artifacts:
         ap.error("--service cannot journal artifact jobs (Job.terms is "
                  "not serializable); drop one of the two")
+    if args.mixed and args.artifacts:
+        ap.error("--mixed builds its own model-zoo TPU trace; it cannot "
+                 "also take --artifacts")
 
     n_jobs = args.jobs or (12 if args.quick else 32)
-    engine_kw, char_freqs, char_cores, input_sizes = _grids(
+    engine_kw, tpu_kw, char_freqs, char_cores, input_sizes = _grids(
         args.quick, args.seed
     )
+    # --mixed splits --nodes between the device families (default 4 = 2+2)
+    n_cpu = args.nodes - args.nodes // 2
+    n_tpu = args.nodes // 2
 
     negotiate = not args.fallback
     migration = (
@@ -429,15 +548,28 @@ def main(argv: Optional[Sequence[str]] = None):
         elif args.service:
             from repro.fleet.service import ServiceKilled
 
-            jobs = build_jobs(
-                n_jobs,
-                seed=args.seed,
-                input_sizes=input_sizes,
-                burst=args.burst,
-            )
+            if args.mixed:
+                jobs = build_mixed_jobs(
+                    n_jobs, seed=args.seed, input_sizes=input_sizes
+                )
+                pool = make_mixed_pool(
+                    n_cpu=n_cpu, n_tpu=n_tpu, seed=args.seed
+                )
+                engine = {
+                    "cpu": fleet_engine(pool, **engine_kw),
+                    "tpu": tpu_fleet_engine(pool, **tpu_kw),
+                }
+            else:
+                jobs = build_jobs(
+                    n_jobs,
+                    seed=args.seed,
+                    input_sizes=input_sizes,
+                    burst=args.burst,
+                )
+                pool = make_pool(args.nodes, seed=args.seed)
+                engine = fleet_engine(pool, **engine_kw)
             drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
             drift_events = [(drift_t, DRIFT_APP, DRIFT_FACTOR)]
-            pool = make_pool(args.nodes, seed=args.seed)
             service_kw = dict(
                 journal=args.journal,
                 kill_at_s=args.kill_at,
@@ -449,6 +581,9 @@ def main(argv: Optional[Sequence[str]] = None):
                     fallback=args.fallback,
                     horizon_s=args.horizon,
                     migration_cost_j=args.migration_cost_j,
+                    mixed=args.mixed,
+                    n_cpu=n_cpu,
+                    n_tpu=n_tpu,
                 ),
             )
             try:
@@ -456,7 +591,7 @@ def main(argv: Optional[Sequence[str]] = None):
                     pool,
                     jobs,
                     drift_events=drift_events,
-                    engine=fleet_engine(pool, **engine_kw),
+                    engine=engine,
                     char_freqs=char_freqs,
                     char_cores=char_cores,
                     negotiate=negotiate,
@@ -481,6 +616,32 @@ def main(argv: Optional[Sequence[str]] = None):
                 + (f"; journal: {args.journal}" if args.journal else "")
             )
             report = None  # single-scenario run: no comparison table
+        elif args.mixed:
+            jobs = build_mixed_jobs(
+                n_jobs, seed=args.seed, input_sizes=input_sizes
+            )
+            drift_app = DRIFT_APP
+            drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+            drift_events = [(drift_t, drift_app, DRIFT_FACTOR)]
+            # drift a TPU family too: the refit → migrate loop must work
+            # on both sides of the heterogeneous pool
+            tpu_apps = [j.app for j in jobs if j.device == "tpu"]
+            if tpu_apps:
+                drift_events.append((drift_t, tpu_apps[0], DRIFT_FACTOR))
+            report, sched = run_mixed_fleet_comparison(
+                jobs,
+                n_cpu=n_cpu,
+                n_tpu=n_tpu,
+                seed=args.seed,
+                drift_events=drift_events,
+                cpu_engine_kw=engine_kw,
+                tpu_engine_kw=tpu_kw,
+                char_freqs=char_freqs,
+                char_cores=char_cores,
+                negotiate=negotiate,
+                migration=migration,
+                lookahead=lookahead,
+            )
         else:
             jobs = build_jobs(
                 n_jobs,

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import tpu_power
 from repro.core.node_sim import (
     CORES_PER_SOCKET,
     FREQ_GRID,
@@ -55,6 +56,14 @@ from repro.core.node_sim import (
 from repro.core.power import PAPER_COEFFS, PowerModel
 
 REFERENCE_FREQS: Tuple[float, ...] = tuple(float(f) for f in FREQ_GRID)
+TPU_FREQS: Tuple[float, ...] = tuple(float(f) for f in tpu_power.F_GRID)
+
+# ground-truth Eq. 7 coefficient groups per device family — the CPU node
+# is the paper's Xeon (Eq. 9), the TPU slice the v5e refit; both are FIT
+# from stress telemetry downstream, never consumed as truth
+DEVICE_COEFFS = {"cpu": PAPER_COEFFS, "tpu": tpu_power.TRUE_COEFFS}
+# fleet-level sensors are noisier than one node's IPMI (tpu_power doc)
+DEVICE_POWER_NOISE_W = {"cpu": 2.4, "tpu": tpu_power.FleetTelemetry.noise_w}
 
 # ---------------------------------------------------------------------------
 # time tolerance: ONE relative epsilon for every sim-clock comparison
@@ -107,6 +116,12 @@ class NodeSpec:
     static_power_skew: float = 1.0  # scales c3 (chassis) + c4 (per socket)
     dynamic_power_skew: float = 1.0  # scales c1 f^3 + c2 f (silicon lottery)
     speed_skew: float = 1.0  # >1: the same work takes longer here
+    # the planning axis this node belongs to: "cpu" (f, cores) or "tpu"
+    # (f, chips, pods). Jobs only ever place on nodes of their own device.
+    device: str = "cpu"
+    # Eq. 7 s(p) granularity: cores/socket on the Xeon, chips/pod on a
+    # TPU slice — ``max_cores`` counts cores or chips in the same unit.
+    cores_per_socket: int = CORES_PER_SOCKET
 
     def truth_coeffs(self, base=PAPER_COEFFS) -> Tuple[float, float, float, float]:
         c1, c2, c3, c4 = base
@@ -131,7 +146,7 @@ class NodeSpec:
         return self.freq_table[-1]
 
     def sockets(self, cores: int) -> int:
-        return int(np.ceil(cores / CORES_PER_SOCKET))
+        return int(np.ceil(cores / self.cores_per_socket))
 
     # -- plan projection: "plan energy × node skew" ------------------------
 
@@ -354,9 +369,16 @@ class CapacityProfile:
 class FleetNode:
     """One live node: skewed ground truth + drift + reservation ledger."""
 
-    def __init__(self, spec: NodeSpec, seed: int = 0, base_coeffs=PAPER_COEFFS):
+    def __init__(self, spec: NodeSpec, seed: int = 0, base_coeffs=None):
         self.spec = spec
-        self.node = Node(seed=seed, power_coeffs=spec.truth_coeffs(base_coeffs))
+        if base_coeffs is None:  # device family picks the truth model
+            base_coeffs = DEVICE_COEFFS[spec.device]
+        self.node = Node(
+            seed=seed,
+            power_coeffs=spec.truth_coeffs(base_coeffs),
+            power_noise_w=DEVICE_POWER_NOISE_W[spec.device],
+            cores_per_socket=spec.cores_per_socket,
+        )
         self._drift: Dict[str, float] = {}
         self.reservations: List[Reservation] = []
         # service-layer availability: a node the fleet service declared
@@ -611,8 +633,32 @@ class NodePool:
         projected per node via the spec skews."""
         return self.nodes[0]
 
-    def max_free_cores(self, now: float) -> int:
-        return max(n.free_cores(now) for n in self.nodes)
+    def devices(self) -> Tuple[str, ...]:
+        """The device families present, in first-appearance order."""
+        seen: List[str] = []
+        for n in self.nodes:
+            if n.spec.device not in seen:
+                seen.append(n.spec.device)
+        return tuple(seen)
+
+    def nodes_for(self, device: Optional[str]) -> List[FleetNode]:
+        """The nodes of one device family (all nodes when ``device`` is
+        None — the homogeneous-pool degenerate case)."""
+        if device is None:
+            return self.nodes
+        return [n for n in self.nodes if n.spec.device == device]
+
+    def reference_for(self, device: Optional[str]) -> FleetNode:
+        """The characterization host of one device family: its first node,
+        mirroring ``reference`` (= ``nodes[0]``) per family."""
+        nodes = self.nodes_for(device)
+        if not nodes:
+            raise ValueError(f"pool has no {device!r} nodes")
+        return nodes[0]
+
+    def max_free_cores(self, now: float, device: Optional[str] = None) -> int:
+        nodes = self.nodes_for(device)
+        return max(n.free_cores(now) for n in nodes) if nodes else 0
 
     def next_completion(self, now: float) -> Optional[float]:
         """The next CONFIRMED reservation end after ``now`` — tentative
@@ -750,5 +796,42 @@ def make_pool(
         spec = specs[i % len(specs)]
         if i >= len(specs):
             spec = dataclasses.replace(spec, name=f"{spec.name}-{i}")
+        nodes.append(FleetNode(spec, seed=seed + 101 * i))
+    return NodePool(nodes)
+
+
+# TPU slices: ``max_cores`` counts CHIPS, ``cores_per_socket`` chips/pod,
+# the frequency table is the v5e DVFS range. The same spec-skew story as
+# the CPU specs — a reference slice, a cross-pod monster with a hungrier
+# shared fabric, and a power-binned slice of slower silicon.
+TPU_SPECS: Tuple[NodeSpec, ...] = (
+    NodeSpec("v5e-ref-0", max_cores=256, freq_table=TPU_FREQS,
+             device="tpu", cores_per_socket=256),
+    NodeSpec("v5e-pod2-1", max_cores=512, freq_table=TPU_FREQS,
+             static_power_skew=1.10, speed_skew=0.97,
+             device="tpu", cores_per_socket=256),
+    NodeSpec("v5e-bin-2", max_cores=256, freq_table=TPU_FREQS[:8],
+             dynamic_power_skew=0.94, speed_skew=1.08,
+             device="tpu", cores_per_socket=256),
+)
+
+
+def make_mixed_pool(
+    n_cpu: int = 2,
+    n_tpu: int = 2,
+    seed: int = 0,
+    cpu_specs: Sequence[NodeSpec] = DEFAULT_SPECS,
+    tpu_specs: Sequence[NodeSpec] = TPU_SPECS,
+) -> NodePool:
+    """A heterogeneous CPU + TPU pool, CPU nodes first (so ``reference``
+    stays the paper's Xeon). Seeds stay distinct across the whole pool."""
+    specs = [cpu_specs[i % len(cpu_specs)] for i in range(n_cpu)]
+    specs += [tpu_specs[i % len(tpu_specs)] for i in range(n_tpu)]
+    nodes = []
+    seen: Dict[str, int] = {}
+    for i, spec in enumerate(specs):
+        if spec.name in seen:
+            spec = dataclasses.replace(spec, name=f"{spec.name}-{i}")
+        seen[spec.name] = i
         nodes.append(FleetNode(spec, seed=seed + 101 * i))
     return NodePool(nodes)

@@ -187,7 +187,7 @@ class Negotiator:
         f_snap = np.empty((kn, mn))
         ratio = np.ones((kn, mn))  # exact 1.0 where no snap: multiplying
         dpc = np.empty((kn, mn))  # by it reproduces the untouched t_ref
-        stat = np.empty(kn)
+        stat = np.empty((kn, mn))
         c1, c2, c3, c4 = self.power.c1, self.power.c2, self.power.c3, self.power.c4
         snap_m: Dict = {}
         ratio_m: Dict = {}
@@ -195,11 +195,16 @@ class Negotiator:
         sock_m: Dict = {}
         for k, pt in enumerate(frontier):
             f, c = pt.frequency_ghz, pt.chips
-            s = sock_m.get(c)
-            if s is None and specs:
-                s = sock_m[c] = specs[0].sockets(c)  # global CORES_PER_SOCKET
-            stat[k] = c3 + c4 * s if specs else 0.0
             for m, spec in enumerate(specs):
+                # sockets are per spec, not global: a mixed pool counts
+                # cores/socket on CPU nodes and chips/pod on TPU slices
+                # (identical values — hence identical floats — on a
+                # homogeneous pool)
+                skey = (spec.cores_per_socket, c)
+                s = sock_m.get(skey)
+                if s is None:
+                    s = sock_m[skey] = spec.sockets(c)
+                stat[k, m] = c3 + c4 * s
                 key = (spec.freq_table, f)
                 fs = snap_m.get(key)
                 if fs is None:
@@ -222,7 +227,7 @@ class Negotiator:
         dyn = chips[:, None] * dpc
         d_skew = np.array([s.dynamic_power_skew for s in specs])
         s_skew = np.array([s.static_power_skew for s in specs])
-        pw = d_skew[None, :] * dyn + s_skew[None, :] * stat[:, None]
+        pw = d_skew[None, :] * dyn + s_skew[None, :] * stat
         t_exp = t_ref * np.array([s.speed_skew for s in specs])[None, :]
         return f_snap, t_exp, pw * t_exp
 

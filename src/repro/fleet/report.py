@@ -30,7 +30,7 @@ from repro.core.evaluate import (
     PlanRun,
     make_governor,
 )
-from repro.fleet.cluster import NodePool, make_pool, time_eps
+from repro.fleet.cluster import NodePool, make_mixed_pool, make_pool, time_eps
 from repro.fleet.negotiate import Negotiator
 from repro.fleet.scheduler import (
     FleetScheduler,
@@ -40,6 +40,7 @@ from repro.fleet.scheduler import (
     apply_due_events,
     fleet_engine,
     next_event_time,
+    tpu_fleet_engine,
 )
 from repro.fleet.telemetry import TelemetryHub
 
@@ -169,6 +170,84 @@ def run_governor_fleet(
     )
 
 
+def run_fixed_fleet(
+    pool: NodePool,
+    jobs: Sequence[Job],
+    *,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    max_rounds: int = 10_000,
+    name: str = "fixed-max",
+) -> ScenarioStats:
+    """The mixed-pool naive baseline: FIFO placement at full tilt.
+
+    What an unplanned heterogeneous cluster does: each job takes the first
+    DEVICE-COMPATIBLE node (by index) with free capacity, grabs ALL of its
+    free cores/chips, and runs pinned at the node's highest table
+    frequency — race-to-idle with nobody planning (f, p). Works for
+    profiled apps and terms-backed (artifact) jobs alike, so it is the
+    governor-FIFO analogue for pools whose devices have no DVFS governor
+    model (a TPU slice has no ``ondemand``).
+    """
+    pending = sorted(jobs, key=lambda j: (j.arrival_s, j.job_id))
+    events = sorted(drift_events)
+    ei = 0
+    now = 0.0
+    job_energy_j: Dict[int, float] = {}
+    job_time_s: Dict[int, float] = {}
+    finishes: Dict[int, float] = {}
+    misses = 0
+    for _ in range(max_rounds):
+        if not pending and pool.next_completion(now) is None:
+            break
+        ei = apply_due_events(pool, events, ei, now)
+        still_pending = []
+        for job in pending:
+            if job.arrival_s > now + time_eps(now):
+                still_pending.append(job)
+                continue
+            placed = False
+            for node in pool:
+                if node.spec.device != job.device:
+                    continue
+                free = node.free_cores(now)  # instantaneous ledger query
+                if free <= 0:
+                    continue
+                f_max = node.spec.freq_table[-1]
+                if job.terms is None:
+                    result = node.run_fixed(
+                        job.app, f_max, free, job.input_size
+                    )
+                else:
+                    base = getattr(job.terms, "base", job.terms)
+                    result = node.run_terms(job.app, base, f_max, free)
+                finish = now + result.time_s
+                node.reserve(now, finish, free, job.job_id)
+                job_energy_j[job.job_id] = result.energy_j
+                job_time_s[job.job_id] = result.time_s
+                finishes[job.job_id] = finish
+                misses += finish > job.deadline_s + time_eps(job.deadline_s)
+                placed = True
+                break
+            if not placed:
+                still_pending.append(job)
+        pending = still_pending
+        nxt = next_event_time(pool, pending, events, ei, now)
+        if nxt is None:
+            break
+        now = nxt
+    makespan_s = max(finishes.values(), default=0.0)
+    return ScenarioStats(
+        name=name,
+        total_energy_j=float(sum(job_energy_j.values())),
+        makespan_s=makespan_s,
+        utilization=pool.utilization(makespan_s),
+        deadline_misses=int(misses),
+        n_jobs=len(job_energy_j),
+        job_energy_j=job_energy_j,
+        job_time_s=job_time_s,
+    )
+
+
 def run_engine_fleet(
     pool: NodePool,
     jobs: Sequence[Job],
@@ -201,13 +280,19 @@ def run_engine_fleet(
     constructor (``journal=...``, ``kill_at_s=...``, ...).
     """
     engine = engine if engine is not None else fleet_engine(pool)
+    # `engine` may be a per-device dict (mixed pools); the negotiator knob
+    # donor just needs SOME power model — FleetScheduler rebuilds one
+    # negotiator per device from it in mixed mode.
+    rep_engine = (
+        engine[pool.reference.spec.device] if isinstance(engine, dict) else engine
+    )
     sched = FleetScheduler(
         pool,
         engine,
         telemetry,
         char_freqs=char_freqs,
         char_cores=char_cores,
-        negotiator=Negotiator(pool, engine.power) if negotiate else None,
+        negotiator=Negotiator(pool, rep_engine.power) if negotiate else None,
         migration=migration,
         lookahead=lookahead,
     )
@@ -504,5 +589,58 @@ def run_fleet_comparison(
     report = FleetReport(
         scenarios=scenarios,
         comparison=build_comparison(engine_stats, gov_stats, jobs, sched.completed),
+    )
+    return report, sched
+
+
+def run_mixed_fleet_comparison(
+    jobs: Sequence[Job],
+    *,
+    n_cpu: int = 2,
+    n_tpu: int = 2,
+    seed: int = 0,
+    drift_events: Sequence[Tuple[float, str, float]] = (),
+    cpu_engine_kw: Optional[dict] = None,
+    tpu_engine_kw: Optional[dict] = None,
+    char_freqs=None,
+    char_cores=None,
+    negotiate: bool = True,
+    migration: Optional[MigrationPolicy] = None,
+    lookahead: Optional[LookaheadPolicy] = None,
+) -> Tuple[FleetReport, FleetScheduler]:
+    """The heterogeneous-pool comparison: per-device engines vs fixed-max.
+
+    Builds a ``make_mixed_pool`` (CPU nodes + TPU slices), hands the
+    scheduler one ``PlanningEngine`` per device family — each planning in
+    its own ``ConfigSpace`` over its own fitted power surface — and runs
+    the trace. The baseline is ``run_fixed_fleet`` on a fresh twin pool:
+    FIFO, all free capacity, top table frequency, no planning. Stock DVFS
+    governors are not meaningful baselines here (a TPU slice has no
+    governor model), so fixed-max is the whole comparison set.
+    """
+    pool = make_mixed_pool(n_cpu=n_cpu, n_tpu=n_tpu, seed=seed)
+    engines = {
+        "cpu": fleet_engine(pool, **dict(cpu_engine_kw or {})),
+        "tpu": tpu_fleet_engine(pool, **dict(tpu_engine_kw or {})),
+    }
+    engine_stats, sched = run_engine_fleet(
+        pool,
+        jobs,
+        drift_events=drift_events,
+        engine=engines,
+        char_freqs=char_freqs,
+        char_cores=char_cores,
+        negotiate=negotiate,
+        migration=migration,
+        lookahead=lookahead,
+    )
+    fpool = make_mixed_pool(n_cpu=n_cpu, n_tpu=n_tpu, seed=seed)
+    fixed_stats = run_fixed_fleet(fpool, jobs, drift_events=drift_events)
+    scenarios = {"engine": engine_stats, fixed_stats.name: fixed_stats}
+    report = FleetReport(
+        scenarios=scenarios,
+        comparison=build_comparison(
+            engine_stats, [fixed_stats], jobs, sched.completed
+        ),
     )
     return report, sched

@@ -64,18 +64,23 @@ import numpy as np
 
 from repro import obs
 from repro.core import svr as svr_mod
+from repro.core import tpu_power
 from repro.core.engine import (
+    CHIP_GRID,
     ENGINE_FIT_KW,
     TIME_FLOOR,
     Constraints,
     EnergyPlan,
     PlanningEngine,
     Workload,
+    cpu_space,
+    tpu_space,
 )
 from repro.core.node_sim import CORES_PER_SOCKET, RunResult
 from repro.core.power import fit_power_model
 from repro.fleet.cluster import (
     AppTerms,
+    CapacityProfile,
     FleetNode,
     NodePool,
     family_key,
@@ -109,6 +114,9 @@ class Job:
     deadline_s: float  # absolute sim time by which the job must finish
     arrival_s: float = 0.0
     terms: Optional[object] = None  # explicit believed surface (artifacts)
+    # which ConfigSpace the job plans in: it only ever places on nodes of
+    # the same device family ("cpu" = (f, cores), "tpu" = (f, chips, pods))
+    device: str = "cpu"
 
 
 @dataclasses.dataclass
@@ -272,16 +280,62 @@ def fleet_engine(
     ref = pool.reference
     freqs = tuple(ref.spec.freq_table) if freqs is None else tuple(freqs)
     if cores is None:
-        cores = tuple(range(1, max(n.spec.max_cores for n in pool) + 1))
+        # only the reference device's nodes bound the grid (identity on a
+        # homogeneous pool; a mixed pool's TPU chip counts stay out)
+        peers = pool.nodes_for(ref.spec.device)
+        cores = tuple(range(1, max(n.spec.max_cores for n in peers) + 1))
     else:
         cores = tuple(int(c) for c in cores)
     if power_model is None:
         power_model = fit_power_model(*ref.stress_grid(freqs, cores))
     return PlanningEngine(
         power_model,
-        freq_grid=freqs,
-        chip_grid=cores,
-        chips_per_pod=CORES_PER_SOCKET,
+        space=cpu_space(
+            freq_grid=freqs,
+            chip_grid=cores,
+            cores_per_socket=CORES_PER_SOCKET,
+        ),
+        noise=noise,
+        seed=seed,
+        objective=objective,
+        on_infeasible="fastest",
+    )
+
+
+def tpu_fleet_engine(
+    pool: NodePool,
+    *,
+    freqs: Optional[Sequence[float]] = None,
+    chips: Optional[Sequence[int]] = None,
+    noise: float = 0.01,
+    seed: int = 0,
+    objective: str = "energy",
+    power_model=None,
+) -> PlanningEngine:
+    """The TPU-family sibling of ``fleet_engine``: a ``PlanningEngine``
+    over the (f_ghz, chips, pods) ``ConfigSpace`` of the pool's TPU
+    slices. The power surface is the paper's Eq. 7 refit for v5e — fitted
+    by the same ``fit_power_model`` OLS from ``tpu_power.FleetTelemetry``
+    stress samples (the fleet's IPMI stand-in), never the truth constants.
+    """
+    ref = pool.reference_for("tpu")
+    freqs = tuple(ref.spec.freq_table) if freqs is None else tuple(freqs)
+    if chips is None:
+        biggest = max(n.spec.max_cores for n in pool.nodes_for("tpu"))
+        chips = tuple(c for c in CHIP_GRID if c <= biggest)
+    else:
+        chips = tuple(int(c) for c in chips)
+    if power_model is None:
+        power_model = tpu_power.fit_fleet_power(
+            tpu_power.FleetTelemetry(seed=seed)
+        )
+    return PlanningEngine(
+        power_model,
+        space=tpu_space(
+            freq_grid=freqs,
+            chip_grid=chips,
+            chips_per_pod=ref.spec.cores_per_socket,
+        ),
         noise=noise,
         seed=seed,
         objective=objective,
@@ -305,10 +359,19 @@ class FleetScheduler:
         lookahead: Optional[LookaheadPolicy] = None,
     ):
         """Args:
-            pool / engine / telemetry: the fleet, its (single, shared)
-                planning engine and the observation hub.
+            pool / engine / telemetry: the fleet, its planning engine(s)
+                and the observation hub. ``engine`` is either ONE shared
+                ``PlanningEngine`` (homogeneous pool, the default path) or
+                a ``{device: PlanningEngine}`` dict (mixed pool): each
+                job then plans in its own device's ``ConfigSpace`` and
+                only places on device-compatible nodes; batched engine
+                passes group by device (one ``plan_many``/``pareto_many``
+                per device family per round).
             char_freqs / char_cores: the re-characterization refit grid
-                (GHz / cores); defaults to the engine's planning grid.
+                (GHz / cores); defaults to the engine's planning grid. In
+                mixed mode the explicit values apply to the reference
+                device's families; other devices refit on their own
+                engine's planning grid.
             negotiator: when set, rounds place via fleet-wide pareto
                 negotiation (``negotiate.Negotiator``) instead of the
                 per-job cheapest-first fallback.
@@ -320,14 +383,24 @@ class FleetScheduler:
                 with tentative reservations (horizon-aware mode).
         """
         self.pool = pool
-        self.engine = engine
+        if isinstance(engine, dict):
+            # mixed pool: one engine per device family; ``self.engine``
+            # stays the reference device's engine so single-engine
+            # consumers (service store, summaries) keep working
+            self.engines: Optional[Dict[str, PlanningEngine]] = dict(engine)
+            self.engine = self.engines[pool.reference.spec.device]
+        else:
+            self.engines = None
+            self.engine = engine
         self.telemetry = telemetry if telemetry is not None else TelemetryHub()
         # re-characterization refit grid (defaults to the planning grid)
+        self._char_freqs_arg = char_freqs
+        self._char_cores_arg = char_cores
         self.char_freqs = tuple(
-            engine.freq_grid if char_freqs is None else char_freqs
+            self.engine.freq_grid if char_freqs is None else char_freqs
         )
         self.char_cores = tuple(
-            engine.chip_grid if char_cores is None else char_cores
+            self.engine.chip_grid if char_cores is None else char_cores
         )
         self.negotiator = negotiator
         self.migration = migration
@@ -338,8 +411,25 @@ class FleetScheduler:
         self._slot_negotiator = (
             negotiator
             if negotiator is not None
-            else Negotiator(pool, engine.power)
+            else Negotiator(pool, self.engine.power)
         )
+        # mixed mode negotiates per device family: each family's rounds
+        # need that family's fitted power surface for option projection
+        # (knobs copied from the user's negotiator when one is set)
+        self._negotiators: Optional[Dict[str, Negotiator]] = None
+        if self.engines is not None:
+            kw = {}
+            if negotiator is not None:
+                kw = dict(
+                    energy_margin=negotiator.energy_margin,
+                    max_moves=negotiator.max_moves,
+                    max_slots=negotiator.max_slots,
+                    max_exchange_targets=negotiator.max_exchange_targets,
+                )
+            self._negotiators = {
+                dev: Negotiator(pool, eng.power, **kw)
+                for dev, eng in self.engines.items()
+            }
         self.rounds: List[RoundLog] = []
         self.completed: List[CompletedJob] = []
         self._pending: List[Job] = []
@@ -348,6 +438,9 @@ class FleetScheduler:
         # under (family_key for profiled apps, the Job.terms instance for
         # artifact jobs) — re-characterization must refresh the same key
         self._family_keys: Dict[Family, object] = {}
+        # telemetry family -> device: which engine a refreshed fit
+        # installs into (mixed mode; None values route to self.engine)
+        self._family_device: Dict[Family, Optional[str]] = {}
         # last refresh's believed-scale ratio per family (new/old) — the
         # migration pass's materiality signal
         self._refit_ratio: Dict[Family, float] = {}
@@ -375,6 +468,27 @@ class FleetScheduler:
 
     # -- the believed model ------------------------------------------------
 
+    def _device_of(self, job: Job) -> Optional[str]:
+        """The device group a job plans in: None in single-engine mode
+        (every device routing question degenerates to the legacy path)."""
+        return None if self.engines is None else job.device
+
+    def _engine_for(self, device: Optional[str]) -> PlanningEngine:
+        """The planning engine of one device group (``self.engine`` for
+        the single-engine scheduler)."""
+        return self.engine if device is None else self.engines[device]
+
+    def _char_grids(self, device: Optional[str]):
+        """The (freqs, cores) re-characterization grid of one device
+        group — explicit constructor grids for the single-engine path,
+        each device's own planning grid in mixed mode."""
+        if device is None or self.engines is None:
+            return self.char_freqs, self.char_cores
+        eng = self.engines[device]
+        if eng is self.engine:  # explicit args bind the reference device
+            return self.char_freqs, self.char_cores
+        return tuple(eng.freq_grid), tuple(eng.chip_grid)
+
     def _terms_key(self, job: Job):
         """The engine cache key of one job's workload family."""
         key = (
@@ -383,6 +497,7 @@ class FleetScheduler:
             else family_key(job.app, job.input_size)
         )
         self._family_keys[(job.app, job.input_size)] = key
+        self._family_device[(job.app, job.input_size)] = self._device_of(job)
         return key
 
     def _workload(self, job: Job, now: float, free_cap: int) -> Workload:
@@ -491,8 +606,31 @@ class FleetScheduler:
                 for j in self._pending
                 if now + eps < j.arrival_s <= horizon_s
             ]
-        cap = self.pool.max_free_cores(now)
-        planned = bool(pending_now) and cap > 0
+        # one placement group per device family (a single group, device
+        # None, for the single-engine scheduler — the legacy path with an
+        # unchanged call sequence); a group plans when it has ready jobs
+        # AND a compatible node with free capacity
+        if self.engines is None:
+            groups = [(None, pending_now, future)]
+        else:
+            devs: List[str] = []
+            for j in pending_now + future:
+                if j.device not in devs:
+                    devs.append(j.device)
+            groups = [
+                (
+                    d,
+                    [j for j in pending_now if j.device == d],
+                    [j for j in future if j.device == d],
+                )
+                for d in devs
+            ]
+        active = []
+        for dev, ready, fut in groups:
+            cap = self.pool.max_free_cores(now, dev)
+            if ready and cap > 0:
+                active.append((dev, ready, fut, cap))
+        planned = bool(active)
         log = RoundLog(
             now=now,
             n_pending=len(pending_now),
@@ -501,40 +639,43 @@ class FleetScheduler:
             # only rounds that actually placed through the Negotiator count
             negotiated=planned and self.negotiator is not None,
             n_migrated=n_migrated,
-            n_future=len(future) if planned else 0,
+            n_future=sum(len(fut) for _, _, fut, _ in active),
         )
         if log.planned:
             with obs.span(
                 "fleet.place", cat="fleet", sim_t_s=now,
-                n_ready=len(pending_now), n_future=len(future),
+                n_ready=len(pending_now), n_future=log.n_future,
             ):
-                if self.lookahead is not None:
-                    self._place_lookahead(pending_now, future, now, log)
-                else:
-                    workloads = [
-                        self._workload(j, now, cap) for j in pending_now
-                    ]
-                    if self.negotiator is not None:
+                for dev, ready, fut, cap in active:
+                    if self.lookahead is not None:
+                        self._place_lookahead(ready, fut, now, log, device=dev)
+                    elif self.negotiator is not None:
+                        workloads = [
+                            self._workload(j, now, cap) for j in ready
+                        ]
                         self._place_negotiated(
-                            pending_now, workloads, now, log
+                            ready, workloads, now, log, device=dev
                         )
                     else:
-                        # THE one batched call
-                        plans = self.engine.plan_many(workloads)
+                        workloads = [
+                            self._workload(j, now, cap) for j in ready
+                        ]
+                        # THE one batched call (per device family)
+                        plans = self._engine_for(dev).plan_many(workloads)
                         order = sorted(
-                            range(len(pending_now)),
+                            range(len(ready)),
                             key=lambda i: (
-                                pending_now[i].deadline_s,
-                                pending_now[i].job_id,
+                                ready[i].deadline_s,
+                                ready[i].job_id,
                             ),
                         )
                         for i in order:
                             placement = self._place(
-                                pending_now[i], workloads[i], plans[i], now
+                                ready[i], workloads[i], plans[i], now
                             )
                             if placement is not None:
                                 self._launch(placement)
-                                self._pending.remove(pending_now[i])
+                                self._pending.remove(ready[i])
                                 log.n_placed += 1
         self.rounds.append(log)
         return log
@@ -545,6 +686,7 @@ class FleetScheduler:
         future: List[Job],
         now: float,
         log: RoundLog,
+        device: Optional[str] = None,
     ) -> None:
         """The horizon-aware round: ready jobs AND known future arrivals in
         ONE batched ``pareto_many``, then the slot-mode joint assignment
@@ -566,8 +708,10 @@ class FleetScheduler:
         ``engine-myopic`` gate and the stranding-trace tests.
         """
         jobs = ready + future
-        cap = self.pool.max_free_cores(now)
-        biggest = max(n.spec.max_cores for n in self.pool)
+        cap = self.pool.max_free_cores(now, device)
+        biggest = max(
+            n.spec.max_cores for n in self.pool.nodes_for(device)
+        )
         # Ready jobs keep the MYOPIC core cap (max free cores at `now`),
         # deliberately: the slot seed walks each ready job's frontier
         # exactly as the myopic greedy would, and that only replays
@@ -581,15 +725,27 @@ class FleetScheduler:
         workloads = [self._workload(j, now, cap) for j in ready] + [
             self._future_workload(j, now, biggest) for j in future
         ]
-        frontiers = self.engine.pareto_many(workloads)  # THE one batched call
+        # THE one batched call (per device family)
+        frontiers = self._engine_for(device).pareto_many(workloads)
+        # device-incompatible nodes expose ZERO capacity to this group's
+        # negotiation: every (point, node) option on them is pruned by the
+        # ordinary capacity check, so enumeration needs no device branch
         profiles = [
-            n.capacity_profile(include_tentative=False) for n in self.pool
+            n.capacity_profile(include_tentative=False)
+            if device is None or n.spec.device == device
+            else CapacityProfile(0)
+            for n in self.pool
         ]
+        negotiator = (
+            self._slot_negotiator
+            if self._negotiators is None
+            else self._negotiators[device]
+        )
         with obs.span(
             "fleet.negotiate", cat="fleet", sim_t_s=now,
             slotted=True, n_jobs=len(jobs),
         ):
-            result = self._slot_negotiator.negotiate(
+            result = negotiator.negotiate(
                 jobs,
                 [w.terms for w in workloads],
                 frontiers,
@@ -648,6 +804,7 @@ class FleetScheduler:
         workloads: List[Workload],
         now: float,
         log: RoundLog,
+        device: Optional[str] = None,
     ) -> None:
         """The negotiated round: ONE batched ``pareto_many`` over every
         pending job (the round's single engine pass — fits, grid
@@ -655,15 +812,27 @@ class FleetScheduler:
         the fleet-wide joint assignment. The negotiation seed replays the
         cheapest-first fallback, so the launched assignment's projected
         (deferred, misses, joules) is never worse."""
-        frontiers = self.engine.pareto_many(workloads)
+        frontiers = self._engine_for(device).pareto_many(workloads)
         terms_list = [w.terms for w in workloads]
-        free = [n.free_cores(now) for n in self.pool]
+        # device-incompatible nodes offer zero free cores to this group:
+        # the ordinary ``cores <= free`` option filter prunes them
+        free = [
+            n.free_cores(now)
+            if device is None or n.spec.device == device
+            else 0
+            for n in self.pool
+        ]
         slacks = [j.deadline_s - now for j in pending_now]
+        negotiator = (
+            self.negotiator
+            if self._negotiators is None
+            else self._negotiators[device]
+        )
         with obs.span(
             "fleet.negotiate", cat="fleet", sim_t_s=now,
             slotted=False, n_jobs=len(pending_now),
         ):
-            result = self.negotiator.negotiate(
+            result = negotiator.negotiate(
                 pending_now, terms_list, frontiers, free, slacks
             )
         log.n_moves = result.n_moves
@@ -699,23 +868,28 @@ class FleetScheduler:
         ref_time_s: float,
         slack_s: float,
         require_deadline: bool,
+        device: Optional[str] = None,
     ) -> List[Tuple[float, int, FleetNode, float, float]]:
         """(expected energy, node index, node, expected time, snapped f),
-        cheapest first — "plan energy × node skew" over nodes with capacity.
+        cheapest first — "plan energy × node skew" over device-compatible
+        nodes with capacity.
 
         A node whose frequency table cannot reach the planned f will run at
         its snapped (usually lower) frequency; the believed surface
         ``terms`` supplies the time ratio between the two, so the deadline
         check, the bin-pack score and the telemetry prediction all describe
         the run the node will actually execute."""
+        power_model = self._engine_for(device).power
         out = []
         for idx, node in enumerate(self.pool):
+            if device is not None and node.spec.device != device:
+                continue
             if node.free_cores(now) < cores:
                 continue
             # one point × M nodes for a single job's fallback placement —
             # below the vectorization payoff  # repro: allow(vectorize-enumeration)
             f_snap, t_exp, e_exp = project_point(
-                node.spec, self.engine.power, terms, cores, f, ref_time_s
+                node.spec, power_model, terms, cores, f, ref_time_s
             )
             if require_deadline and t_exp > slack_s:
                 continue
@@ -726,6 +900,7 @@ class FleetScheduler:
         self, job: Job, workload: Workload, plan: EnergyPlan, now: float
     ) -> Optional[Placement]:
         slack_s = job.deadline_s - now
+        dev = self._device_of(job)
         frontier = None
         # First pass honors the deadline; if nothing in the pool can make
         # it, the second pass places for minimum energy and eats the miss
@@ -735,7 +910,7 @@ class FleetScheduler:
         for require_deadline in passes:
             cand = self._candidates(
                 now, terms, plan.chips, plan.frequency_ghz, plan.step_time_s,
-                slack_s, require_deadline,
+                slack_s, require_deadline, device=dev,
             )
             if cand:
                 e_exp, _, node, t_exp, f_snap = cand[0]
@@ -757,11 +932,11 @@ class FleetScheduler:
                 # one deadline-infeasible job on the rare fallback path,
                 # memoized across both passes — not a per-round N-job loop
                 # repro: allow(batched-hot-path)
-                frontier = self.engine.pareto(workload)
+                frontier = self._engine_for(dev).pareto(workload)
             for point in reversed(frontier):  # slowest/cheapest first
                 cand = self._candidates(
                     now, terms, point.chips, point.frequency_ghz,
-                    point.step_time_s, slack_s, require_deadline,
+                    point.step_time_s, slack_s, require_deadline, device=dev,
                 )
                 if cand:
                     e_exp, _, node, t_exp, f_snap = cand[0]
@@ -881,17 +1056,18 @@ class FleetScheduler:
             return old_terms.time_scale
         return old_terms.time_scale * float(np.mean(ratios))
 
-    def _refit_set(self, terms: AppTerms, family: Family):
+    def _refit_set(self, terms: AppTerms, family: Family, device=None):
         """Training set for one refreshed family: the believed surface
         rescaled by the telemetry-estimated drift on the (char_freqs ×
-        char_cores) grid, anchored by the family's recent real observations
-        mapped back to reference scale. No new measurement runs — the
-        refit is paid for by joules the fleet already burned (a dedicated
-        re-characterization sweep would cost unaccounted energy and skew
-        the governor comparison)."""
+        char_cores) grid of the family's device, anchored by the family's
+        recent real observations mapped back to reference scale. No new
+        measurement runs — the refit is paid for by joules the fleet
+        already burned (a dedicated re-characterization sweep would cost
+        unaccounted energy and skew the governor comparison)."""
+        char_freqs, char_cores = self._char_grids(device)
         feats, times = [], []
-        for f in self.char_freqs:
-            for c in self.char_cores:
+        for f in char_freqs:
+            for c in char_cores:
                 feats.append((float(f), float(c)))
                 times.append(max(terms.step_time(float(f), int(c)), TIME_FLOOR))
         for o in self._epoch_observations(family):
@@ -920,24 +1096,30 @@ class FleetScheduler:
         keys = [
             self._family_keys.get(fam, family_key(*fam)) for fam in stale
         ]
+        # mixed mode: each family refits on, and installs into, its own
+        # device's engine — but the fit batch below stays ONE call
+        fam_devs = [self._family_device.get(fam) for fam in stale]
         new_terms = []
-        for fam, key in zip(stale, keys):
-            old = self.engine.cached_terms(key) or key
+        for fam, key, dev in zip(stale, keys, fam_devs):
+            old = self._engine_for(dev).cached_terms(key) or key
             scale = self._drift_scale(fam, old)
             self._refit_ratio[fam] = scale / max(old.time_scale, 1e-12)
             new_terms.append(
                 dataclasses.replace(old, time_scale=scale, source="telemetry")
             )
-        sets = [self._refit_set(t, fam) for t, fam in zip(new_terms, stale)]
+        sets = [
+            self._refit_set(t, fam, dev)
+            for t, fam, dev in zip(new_terms, stale, fam_devs)
+        ]
         # method="auto": small telemetry windows refit on the exact dual
         # solve; windows past svr.RFF_THRESHOLD observations take the
         # linear random-Fourier-feature path (one batch either way)
         models = svr_mod.fit_many(sets, method="auto", **ENGINE_FIT_KW)
         preds = svr_mod.predict_each(models, [x for x, _ in sets])
-        for fam, key, terms, model, (x, y), pred in zip(
-            stale, keys, new_terms, models, sets, preds
+        for fam, key, dev, terms, model, (x, y), pred in zip(
+            stale, keys, fam_devs, new_terms, models, sets, preds
         ):
-            self.engine.install_fit(
+            self._engine_for(dev).install_fit(
                 key, model, svr_mod.pae_from_pred(pred, y), terms
             )
             # remember the training set: crash recovery re-fits it to
@@ -996,8 +1178,10 @@ class FleetScheduler:
                 or c.migrations >= pol.max_migrations_per_job
             ):
                 continue
+            dev = self._device_of(job)
+            engine = self._engine_for(dev)
             key = self._terms_key(job)
-            terms = self.engine.cached_terms(key) or key  # refreshed belief
+            terms = engine.cached_terms(key) or key  # refreshed belief
             node = self._node_by_name(c.placement.node)
             t_full = node.spec.expected_time(
                 terms.step_time(c.placement.frequency_ghz, c.placement.cores)
@@ -1009,17 +1193,19 @@ class FleetScheduler:
             # one call per drift-flagged in-flight job (its CURRENT node
             # only, no grid)  # repro: allow(vectorize-enumeration)
             _, _, e_full = project_point(
-                node.spec, self.engine.power, terms, c.placement.cores,
+                node.spec, engine.power, terms, c.placement.cores,
                 c.placement.frequency_ghz, terms.step_time(
                     c.placement.frequency_ghz, c.placement.cores
                 ),
             )
             slack_s = job.deadline_s - now
             free_cap = max(
-                n.free_cores(now, exclude_job=job.job_id) for n in self.pool
+                n.free_cores(now, exclude_job=job.job_id)
+                for n in self.pool.nodes_for(dev)
             )
             candidates.append(
-                (c, terms, remaining_frac, e_full * remaining_frac, slack_s)
+                (c, terms, remaining_frac, e_full * remaining_frac, slack_s,
+                 dev)
             )
             workloads.append(
                 Workload(
@@ -1039,12 +1225,26 @@ class FleetScheduler:
             )
         if not candidates:
             return 0
-        frontiers = self.engine.pareto_many(workloads)  # ONE batched pass
+        if self.engines is None:
+            frontiers = self.engine.pareto_many(workloads)  # ONE batched pass
+        else:
+            # mixed mode: ONE batched pass per device family present
+            frontiers: List = [None] * len(workloads)
+            by_dev: Dict[Optional[str], List[int]] = {}
+            for i, cand in enumerate(candidates):
+                by_dev.setdefault(cand[5], []).append(i)
+            for dev, idxs in by_dev.items():
+                frs = self._engine_for(dev).pareto_many(
+                    [workloads[i] for i in idxs]
+                )
+                for i, fr in zip(idxs, frs):
+                    frontiers[i] = fr
         migrated = 0
-        for (c, terms, r_b, e_remain_cur, slack_s), frontier in zip(
+        for (c, terms, r_b, e_remain_cur, slack_s, dev), frontier in zip(
             candidates, frontiers
         ):
             job = c.placement.job
+            power_model = self._engine_for(dev).power
             # believed on-deadline status of the current placement
             node_cur = self._node_by_name(c.placement.node)
             t_remain_cur = node_cur.spec.expected_time(
@@ -1054,6 +1254,8 @@ class FleetScheduler:
             best = None
             for pt in frontier:
                 for idx, node in enumerate(self.pool):
+                    if dev is not None and node.spec.device != dev:
+                        continue
                     free = node.free_cores(now, exclude_job=job.job_id)
                     if pt.chips > free:
                         continue
@@ -1062,7 +1264,7 @@ class FleetScheduler:
                     # min_drift) — the K·M win does not apply
                     # repro: allow(vectorize-enumeration)
                     f_snap, t_exp, e_exp = project_point(
-                        node.spec, self.engine.power, terms, pt.chips,
+                        node.spec, power_model, terms, pt.chips,
                         pt.frequency_ghz, pt.step_time_s,
                     )
                     if meets_now and slack_s > 0 and r_b * t_exp > slack_s:

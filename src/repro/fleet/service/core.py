@@ -40,6 +40,7 @@ from repro.fleet.scheduler import CompletedJob, FleetScheduler, Job
 from repro.fleet.service import events as ev
 from repro.fleet.service.events import SERVICE_SCHEMA_VERSION, Event, EventBus
 from repro.fleet.service.manager import NodeManager
+from repro.fleet.service import store
 from repro.fleet.service.store import JobStore, Journal, LedgerStore
 from repro.fleet.telemetry import PreemptionRecord
 
@@ -159,10 +160,10 @@ class SchedulerService:
     def submit(self, job: Job) -> None:
         """Re-entrant job intake: queue the job, schedule its arrival."""
         if self.journal is not None and job.terms is not None:
-            raise ValueError(
-                f"job {job.job_id}: artifact jobs (Job.terms set) cannot "
-                "be journaled — submit without a journal"
-            )
+            # reject unjournalable believed surfaces at intake, not at the
+            # first commit (store's fixed wire schema covers exactly
+            # TermsFamily-over-RooflineTerms — the model-zoo intake)
+            store._terms_to_json(job)
         sched = self.scheduler
         sched._pending.append(job)
         # stable sort on the lockstep driver's exact key: a batch of

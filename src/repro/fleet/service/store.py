@@ -43,9 +43,9 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core import svr as svr_mod
-from repro.core.engine import ENGINE_FIT_KW
+from repro.core.engine import ENGINE_FIT_KW, RooflineTerms
 from repro.core.node_sim import RunResult
-from repro.fleet.cluster import Reservation, family_key
+from repro.fleet.cluster import Reservation, TermsFamily, family_key
 from repro.fleet.scheduler import CompletedJob, Job, Placement, RoundLog
 from repro.fleet.service.events import SERVICE_SCHEMA_VERSION
 from repro.fleet.telemetry import TelemetryHub
@@ -63,32 +63,78 @@ def _array_from_json(payload: dict) -> np.ndarray:
     return np.asarray(payload["data"], dtype=payload["dtype"])
 
 
-def _job_to_json(job: Job) -> dict:
-    if job.terms is not None:
-        # artifact jobs carry arbitrary believed-surface objects; the
-        # journal cannot round-trip them faithfully, and a lossy restore
-        # would silently break bitwise replay
-        raise ValueError(
-            f"job {job.job_id}: artifact jobs (Job.terms set) are not "
-            "journalable — run them on the lockstep driver or without "
-            "a journal"
-        )
+def _family_terms_to_json(t: TermsFamily) -> dict:
     return {
+        "app": t.app,
+        "input_size": t.input_size,
+        "time_scale": t.time_scale,
+        "source": t.source,
+        "base": {
+            "compute_s": t.base.compute_s,
+            "memory_s": t.base.memory_s,
+            "collective_s": t.base.collective_s,
+            "source": t.base.source,
+        },
+    }
+
+
+def _family_terms_from_json(p: dict) -> TermsFamily:
+    return TermsFamily(
+        base=RooflineTerms(
+            compute_s=float(p["base"]["compute_s"]),
+            memory_s=float(p["base"]["memory_s"]),
+            collective_s=float(p["base"]["collective_s"]),
+            source=str(p["base"]["source"]),
+        ),
+        app=str(p["app"]),
+        input_size=float(p["input_size"]),
+        time_scale=float(p["time_scale"]),
+        source=str(p["source"]),
+    )
+
+
+def _terms_to_json(job: Job) -> dict:
+    t = job.terms
+    if not (
+        isinstance(t, TermsFamily) and isinstance(t.base, RooflineTerms)
+    ):
+        # arbitrary believed-surface objects have no fixed wire schema; a
+        # lossy restore would silently break bitwise replay
+        raise ValueError(
+            f"job {job.job_id}: only TermsFamily(base=RooflineTerms) "
+            "artifact jobs are journalable — run other terms on the "
+            "lockstep driver or without a journal"
+        )
+    return _family_terms_to_json(t)
+
+
+def _job_to_json(job: Job) -> dict:
+    d = {
         "job_id": job.job_id,
         "app": job.app,
         "input_size": job.input_size,
         "deadline_s": job.deadline_s,
         "arrival_s": job.arrival_s,
     }
+    # heterogeneous-pool fields ride only when non-default, keeping the
+    # CPU-only wire format (and its golden journals) byte-stable
+    if job.device != "cpu":
+        d["device"] = job.device
+    if job.terms is not None:
+        d["terms"] = _terms_to_json(job)
+    return d
 
 
 def _job_from_json(p: dict) -> Job:
+    terms = p.get("terms")
     return Job(
         job_id=int(p["job_id"]),
         app=str(p["app"]),
         input_size=float(p["input_size"]),
         deadline_s=float(p["deadline_s"]),
         arrival_s=float(p["arrival_s"]),
+        terms=_family_terms_from_json(terms) if terms is not None else None,
+        device=str(p.get("device", "cpu")),
     )
 
 
@@ -221,15 +267,25 @@ class LedgerStore:
             )
         beliefs = []
         for fam, (terms, x, y) in sorted(sched._installed_sets.items()):
-            beliefs.append(
-                {
-                    "family": list(fam),
-                    "time_scale": terms.time_scale,
-                    "source": terms.source,
-                    "x": _array_to_json(x),
-                    "y": _array_to_json(y),
-                }
-            )
+            rec = {
+                "family": list(fam),
+                "time_scale": terms.time_scale,
+                "source": terms.source,
+                "x": _array_to_json(x),
+                "y": _array_to_json(y),
+            }
+            # mixed pools fit per-device engines; the refit must reinstall
+            # into the same one (absent key = legacy single-engine journal)
+            dev = sched._family_device.get(fam)
+            if dev is not None:
+                rec["device"] = dev
+            # artifact families cache under the time_scale==1.0
+            # TermsFamily instance, not an AppTerms key — journal it so
+            # recovery re-installs under the exact same key
+            key = sched._family_keys.get(fam)
+            if isinstance(key, TermsFamily):
+                rec["key_terms"] = _family_terms_to_json(key)
+            beliefs.append(rec)
         return {
             "nodes": nodes,
             "beliefs": beliefs,
@@ -266,13 +322,19 @@ def _reinstall_beliefs(sched, beliefs: List[dict]) -> None:
     preds = svr_mod.predict_each(models, [x for x, _ in sets])
     for b, model, (x, y), pred in zip(beliefs, models, sets, preds):
         fam = (str(b["family"][0]), float(b["family"][1]))
-        key = family_key(*fam)
+        kt = b.get("key_terms")
+        key = (
+            _family_terms_from_json(kt) if kt is not None else family_key(*fam)
+        )
         terms = dataclasses.replace(
             key, time_scale=float(b["time_scale"]), source=str(b["source"])
         )
-        sched.engine.install_fit(
+        dev = b.get("device")
+        sched._engine_for(dev).install_fit(
             key, model, svr_mod.pae_from_pred(pred, y), terms
         )
+        sched._family_keys[fam] = key
+        sched._family_device[fam] = dev
         sched._installed_sets[fam] = (terms, x, y)
 
 

@@ -80,9 +80,13 @@ class ElasticController:
         ``planner`` may be a ``PlanningEngine`` or the legacy
         ``EnergyOptimalPlanner`` shim (which carries one as ``.engine``).
         The pool cap is an engine constraint, so the argmin itself honors
-        it; the final ``min`` only guards the infeasible-pool fallback
-        (pools below the chip grid's floor resolve to the fastest grid
-        point, which may exceed the pool)."""
+        it. When the cap is infeasible the engine's fastest-grid-point
+        fallback may exceed the pool; the chosen slice then snaps to the
+        engine's ``ConfigSpace`` — the largest grid parallelism value that
+        fits — so a TPU chip pool between grid points still re-plans onto
+        a real configuration (the CPU space's unit-step core grid makes
+        the snap the identity there). Only a pool below the space's grid
+        floor takes everything it has."""
         if self.planner is None:
             return available
         engine = getattr(self.planner, "engine", self.planner)
@@ -93,7 +97,11 @@ class ElasticController:
                 constraints=Constraints(max_cores=available),
             )
         )
-        return min(plan.chips, available)
+        if plan.chips <= available:
+            return plan.chips
+        space = getattr(engine, "space", None)
+        cap = space.snap_cap(available) if space is not None else None
+        return cap if cap is not None else min(plan.chips, available)
 
     def build(self, chips: int):
         shape = mesh_shape_for(chips, self.prefer_model)

@@ -1,0 +1,8 @@
+"""Fixture: unit-suffix in the configs/ scope — a shape-table helper
+mixing ms+s arithmetic and dropping suffixes (3 fires)."""
+
+
+def shape_budget(step_ms, window_s, power_w):
+    horizon = step_ms + window_s
+    peak_power = power_w
+    return horizon, peak_power

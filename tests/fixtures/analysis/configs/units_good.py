@@ -1,0 +1,7 @@
+"""Fixture: configs/ scope with consistent unit suffixes — quiet."""
+
+
+def shape_budget(step_s, window_s, power_w):
+    horizon_s = step_s + window_s
+    peak_power_w = power_w
+    return horizon_s, peak_power_w

@@ -1,0 +1,13 @@
+"""Fixture: launch/ scope terms object (step_time => engine cache key)
+that is a mutable dataclass — cache-key-frozen fires four times."""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class DryrunTerms:
+    seconds: list
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def step_time(self, f, chips):
+        return self.seconds[0] / (f * chips)

@@ -1,0 +1,12 @@
+"""Fixture: launch/ scope frozen, hashable terms dataclass — quiet."""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunTerms:
+    seconds: Tuple[float, ...]
+
+    def step_time(self, f, chips):
+        return self.seconds[0] / (f * chips)

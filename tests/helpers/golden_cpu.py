@@ -1,0 +1,139 @@
+"""Golden CPU fingerprints for the ConfigSpace refactor parity gate.
+
+``compute_fingerprint()`` runs the canonical CPU planning paths — a
+quick ``fleet_engine`` ``plan_many``/``pareto_many`` batch (fused AND
+exact arms) plus a quick negotiated+migrating ``FleetScheduler`` trace —
+and renders every decision and float bit-exactly (``repr`` round-trips
+IEEE doubles through JSON losslessly).
+
+The checked-in ``tests/data/golden_cpu_fingerprint.json`` was captured
+on the PRE-refactor engine; ``tests/test_config_space.py`` asserts the
+default-``ConfigSpace`` engine still reproduces it bitwise. Regenerate
+(only when an intentional planning change ships) with::
+
+    PYTHONPATH=src:. python tests/helpers/golden_cpu.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "data", "golden_cpu_fingerprint.json"
+)
+
+
+def _plan_row(plan) -> dict:
+    return {
+        "arch": plan.arch,
+        "chips": int(plan.chips),
+        "pods": int(plan.pods),
+        "frequency_ghz": float(plan.frequency_ghz),
+        "step_time_s": float(plan.step_time_s),
+        "power_w": float(plan.power_w),
+        "energy_per_step_j": float(plan.energy_per_step_j),
+        "baseline_energy_j": float(plan.baseline_energy_j),
+    }
+
+
+def _frontier_rows(frontier) -> list:
+    return [
+        {
+            "chips": int(pt.chips),
+            "pods": int(pt.pods),
+            "frequency_ghz": float(pt.frequency_ghz),
+            "step_time_s": float(pt.step_time_s),
+            "power_w": float(pt.power_w),
+            "energy_per_step_j": float(pt.energy_per_step_j),
+        }
+        for pt in frontier
+    ]
+
+
+def compute_fingerprint() -> dict:
+    from repro.core.engine import Constraints, Workload
+    from repro.core.node_sim import FREQ_GRID
+    from repro.fleet.cluster import family_key, make_pool
+    from repro.fleet.scheduler import (
+        FleetScheduler,
+        MigrationPolicy,
+        fleet_engine,
+    )
+    from repro.fleet.negotiate import Negotiator
+    from repro.fleet.__main__ import DRIFT_APP, DRIFT_FACTOR, build_jobs
+
+    # -- engine arm: quick grids, mixed constraints, fused + exact ------
+    pool = make_pool(4, seed=0)
+    engine = fleet_engine(
+        pool,
+        freqs=tuple(FREQ_GRID[::2]),
+        cores=tuple(range(1, 33, 2)),
+        noise=0.01,
+        seed=0,
+    )
+    workloads = [
+        Workload("raytrace", terms=family_key("raytrace", 1.0)),
+        Workload("swaptions", terms=family_key("swaptions", 2.0),
+                 constraints=Constraints(max_time_s=2000.0, max_cores=16)),
+        Workload("blackscholes", terms=family_key("blackscholes", 1.0),
+                 objective="edp"),
+        Workload("fluidanimate", terms=family_key("fluidanimate", 3.0),
+                 constraints=Constraints(min_frequency_ghz=1.5)),
+        Workload("raytrace", terms=family_key("raytrace", 2.0),
+                 constraints=Constraints(max_time_s=1e-9)),  # infeasible
+    ]
+    plans_fused = engine.plan_many(workloads)
+    plans_exact = engine.plan_many(workloads, fused=False)
+    frontiers = engine.pareto_many(workloads)
+
+    # -- fleet arm: negotiated + migrating quick schedule under drift ---
+    jobs = build_jobs(8, seed=0)
+    drift_t = jobs[len(jobs) // 3].arrival_s + 1.0
+    spool = make_pool(4, seed=0)
+    sengine = fleet_engine(
+        spool,
+        freqs=tuple(FREQ_GRID[::2]),
+        cores=tuple(range(1, 33, 2)),
+        noise=0.01,
+        seed=0,
+    )
+    sched = FleetScheduler(
+        spool,
+        sengine,
+        negotiator=Negotiator(spool, sengine.power),
+        migration=MigrationPolicy(),
+    )
+    completed = sched.run(
+        jobs, drift_events=[(drift_t, DRIFT_APP, DRIFT_FACTOR)]
+    )
+    schedule = [
+        {
+            "job_id": c.placement.job.job_id,
+            "node": c.placement.node,
+            "frequency_ghz": float(c.placement.frequency_ghz),
+            "cores": int(c.placement.cores),
+            "start_s": float(c.placement.start_s),
+            "finish_s": float(c.finish_s),
+            "energy_j": float(c.total_energy_j),
+            "time_s": float(c.total_time_s),
+            "migrations": int(c.migrations),
+        }
+        for c in sorted(completed, key=lambda c: c.placement.job.job_id)
+    ]
+    return {
+        "plans_fused": [_plan_row(p) for p in plans_fused],
+        "plans_exact": [_plan_row(p) for p in plans_exact],
+        "frontiers": [_frontier_rows(fr) for fr in frontiers],
+        "schedule": schedule,
+        "total_energy_j": float(sched.total_energy_j()),
+        "makespan_s": float(sched.makespan_s),
+    }
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    fp = compute_fingerprint()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(fp, f, indent=1)
+    print(f"wrote {os.path.normpath(GOLDEN_PATH)}")

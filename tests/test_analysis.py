@@ -56,9 +56,49 @@ RULE_FIXTURES = [
 ]
 
 
+# repo-wide rules exercised at the newly opened scope paths (configs/,
+# launch/, models/ mirror the src/repro/ planning-adjacent packages the
+# ConfigSpace refactor made load-bearing) — same fixture contract as
+# RULE_FIXTURES, but keyed by scope rather than one-row-per-rule
+SCOPE_FIXTURES = [
+    ("unit-suffix", "configs/units_bad.py", 3, "configs/units_good.py"),
+    ("cache-key-frozen", "launch/cachekey_bad.py", 4,
+     "launch/cachekey_good.py"),
+]
+
+
 def test_every_rule_has_a_fixture_row():
     assert {r for r, _, _, _ in RULE_FIXTURES} == set(RULES)
     assert len(RULES) >= 6
+
+
+@pytest.mark.parametrize("rule_id,bad,n_expected,good", SCOPE_FIXTURES)
+def test_rules_cover_the_new_scopes(rule_id, bad, n_expected, good):
+    """unit-suffix / cache-key-frozen bind in configs/ and launch/ paths
+    too — the scope predicate is repo-wide, not core/fleet-only."""
+    findings, _ = _run_fixture(bad, rule_id)
+    assert len(findings) == n_expected, [f.render() for f in findings]
+    for f in findings:
+        assert f.rule == rule_id and f.path == bad
+    quiet, _ = _run_fixture(good, rule_id)
+    assert quiet == [], [f.render() for f in quiet]
+
+
+def test_shipped_scope_dirs_are_clean():
+    """The opened scopes themselves carry no violations: configs/,
+    models/ and launch/ under src/repro analyze clean (no baseline
+    entries hide behind the tier-1 sweep of all of src/)."""
+    result = analyze_paths(
+        [
+            os.path.join("src", "repro", d)
+            for d in ("configs", "models", "launch")
+        ],
+        root=REPO,
+    )
+    assert result.parse_errors == []
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings
+    )
 
 
 @pytest.mark.parametrize("rule_id,bad,n_expected,good", RULE_FIXTURES)

@@ -91,7 +91,7 @@ import benchmarks.run as bench_main
 
 for mod, flags in (
     (fleet_main, ("--quick", "--artifacts", "--fallback", "--json",
-                  "--nodes", "--horizon", "--burst",
+                  "--nodes", "--horizon", "--burst", "--mixed",
                   "--service", "--journal", "--kill-at", "--resume")),
     (eval_main, ("--quick", "--objective")),
     (lint_main, ("--json", "--baseline", "--write-baseline", "--select",
@@ -145,6 +145,7 @@ def test_bench_registry_names_are_stable():
 
         assert set(bench_run.BENCHES) >= {
             "paper", "engine", "svr_fit", "fleet", "kernels", "analysis",
+            "bench_tpu",
         }
     finally:
         sys.path.remove(REPO)

@@ -63,6 +63,51 @@ def test_choose_chips_accepts_legacy_shim(fleet_pm, tmp_path):
     assert ctl._choose_chips(128) <= 128
 
 
+def test_choose_chips_cpu_space_unchanged(fleet_pm, tmp_path):
+    """Routing through ``ConfigSpace`` must not move the CPU choice: the
+    controller's pick is bitwise the engine's own constrained argmin, and
+    the unit-step core grid makes the snap path the identity."""
+    from repro.core.engine import (
+        Constraints,
+        PlanningEngine,
+        Workload,
+        cpu_space,
+    )
+
+    def fresh():
+        return PlanningEngine(
+            fleet_pm,
+            space=cpu_space(),
+            noise=0.01,
+            seed=0,
+            dryrun_dir=str(tmp_path),
+        )
+
+    ctl = _controller(fresh(), tmp_path)
+    for avail in (32, 24, 7, 1):
+        want = fresh().plan(
+            Workload(
+                "elastic-test-arch",
+                ctl.cell,
+                constraints=Constraints(max_cores=avail),
+            )
+        ).chips
+        assert ctl._choose_chips(avail) == want <= avail
+
+
+def test_choose_chips_snaps_tpu_pool_to_grid(fleet_pm, tmp_path):
+    """A TPU chip pool between grid points still re-plans onto a real
+    grid configuration; only a pool below the grid floor is taken whole."""
+    from repro.core.engine import PlanningEngine
+
+    eng = PlanningEngine(fleet_pm, noise=0.01, seed=0, dryrun_dir=str(tmp_path))
+    ctl = _controller(eng, tmp_path)
+    for avail in (512, 300, 100, 20):
+        chips = ctl._choose_chips(avail)
+        assert chips <= avail and chips in eng.chip_grid
+    assert ctl._choose_chips(9) <= 9  # below the 16-chip grid floor
+
+
 def test_choose_chips_without_planner():
     ctl = ElasticController(
         types.SimpleNamespace(arch_id="x"), None, None, None, None
